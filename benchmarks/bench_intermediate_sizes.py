@@ -1,0 +1,64 @@
+"""Paper Tab. 1 — intermediate data batch size vs context length.
+
+Measures the EXACT bytes of our ExperienceBatch (the tensors EARL's Data
+Dispatcher moves: tokens, masks, log-probs, ref log-probs, rewards,
+returns, advantages, lengths) at each context length, and scales to the
+paper's 1k-GPU cluster. The paper's estimates double with context length;
+the check here is that measured bytes are linear in context with the same
+doubling structure.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.rl.experience import zeros_like_experience
+
+CONTEXTS = [1_024, 2_048, 4_096, 8_192, 16_384, 32_768]
+N_GPUS = 1024
+RESPONSES_PER_GPU = 8          # rollout batch each worker owns
+
+# Paper Tab. 1 (MiB) for reference
+PAPER_MIB = {1024: 15_625, 2048: 31_250, 4096: 62_500, 8192: 125_000,
+             16384: 250_000, 32768: 500_000}
+
+
+def run():
+    rows = []
+    prev = None
+    for ctx in CONTEXTS:
+        t0 = time.perf_counter()
+        exp = zeros_like_experience(RESPONSES_PER_GPU, ctx)
+        per_worker = exp.nbytes()
+        dt = time.perf_counter() - t0
+        cluster = per_worker * N_GPUS
+        ratio = (cluster / prev) if prev else float("nan")
+        prev = cluster
+        rows.append({
+            "context": ctx,
+            "per_worker_MiB": per_worker / 2**20,
+            "cluster_MiB": cluster / 2**20,
+            "doubling_ratio": ratio,
+            "paper_MiB": PAPER_MIB[ctx],
+            "bytes_per_token_row": per_worker / (RESPONSES_PER_GPU * ctx),
+            "measure_s": dt,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("# Tab.1 repro: ExperienceBatch bytes vs context (1k-GPU scale)")
+    print("context,per_worker_MiB,cluster_MiB,doubling,paper_MiB")
+    for r in rows:
+        print(f"{r['context']},{r['per_worker_MiB']:.2f},"
+              f"{r['cluster_MiB']:.1f},{r['doubling_ratio']:.3f},"
+              f"{r['paper_MiB']}")
+    # structural check: bytes double with context, like the paper's table
+    for r in rows[1:]:
+        assert abs(r["doubling_ratio"] - 2.0) < 0.02, r
+    print("OK: batch bytes double with context length (paper Tab. 1 shape)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""§Roofline — renders the per-(arch x shape x mesh) roofline table from
+the dry-run artifacts (benchmarks/results/dryrun/*.json).
+
+For each pair: the three terms in seconds, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs (useful-compute ratio), and peak bytes/device.
+Run ``python -m repro.launch.dryrun --both-meshes`` first (slow) — this
+bench only reads its output.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(mesh: str = "16x16"):
+    rows = []
+    for f in sorted(RESULTS.glob(f"*_{mesh}.json")):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh)
+        if not rows:
+            print(f"# no dry-run artifacts for mesh {mesh} — run "
+                  f"PYTHONPATH=src python -m repro.launch.dryrun "
+                  f"--both-meshes")
+            continue
+        print(f"# §Roofline ({mesh}, {rows[0]['chips']} chips, "
+              f"v5e constants)")
+        print("arch,shape,compute_s,memory_s,collective_s,bottleneck,"
+              "useful_ratio,peak_GiB_per_dev")
+        for r in rows:
+            rl = r["roofline"]
+            print(f"{r['arch']},{r['shape']},{rl['compute_s']:.4g},"
+                  f"{rl['memory_s']:.4g},{rl['collective_s']:.4g},"
+                  f"{rl['bottleneck']},{rl['useful_flops_ratio']:.3f},"
+                  f"{r['peak_bytes_per_device']/2**30:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+
+| paper artifact | bench |
+|---|---|
+| Tab. 1 intermediate batch sizes   | bench_intermediate_sizes |
+| Fig. 1 context growth & collapse  | bench_context_growth |
+| Fig. 3 TP4->TP8 speedup + OOM     | bench_parallelism |
+| Fig. 4 dispatch latency           | bench_dispatch |
+| §Roofline table (from dry-run)    | bench_roofline |
+
+Each bench prints its own CSV; this driver wraps them with timing rows
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow compile-heavy benches")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_context_growth, bench_dispatch,
+                            bench_intermediate_sizes, bench_parallelism,
+                            bench_roofline)
+
+    benches = [
+        ("tab1_intermediate_sizes", bench_intermediate_sizes.main, False),
+        ("fig1_context_growth", bench_context_growth.main, False),
+        ("fig3_parallelism_speedup", bench_parallelism.main, True),
+        ("fig4_dispatch_latency", bench_dispatch.main, False),
+        ("roofline_table", bench_roofline.main, False),
+    ]
+
+    summary = []
+    failed = 0
+    for name, fn, slow in benches:
+        if args.only and args.only not in name:
+            continue
+        if args.quick and slow:
+            print(f"== {name}: skipped (--quick)")
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        try:
+            fn()
+            dt = (time.perf_counter() - t0) * 1e6
+            summary.append((name, dt, "ok"))
+        except Exception:
+            traceback.print_exc()
+            failed += 1
+            summary.append((name, (time.perf_counter() - t0) * 1e6, "FAIL"))
+
+    print("\n# name,us_per_call,derived")
+    for name, us, status in summary:
+        print(f"{name},{us:.0f},{status}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

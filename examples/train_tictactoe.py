@@ -1,0 +1,86 @@
+"""End-to-end agentic RL: train a policy on Tic-Tac-Toe through the full
+EARL Fig. 2 loop (rollout -> experience prep -> dispatch -> update), with
+the Parallelism Selector monitoring context growth.
+
+This is the paper's Fig. 1 industrial-practice setup at CPU scale. With
+the defaults (one action token per turn — clean credit assignment) the
+mean return improves ~+0.1 per 150 steps from the -0.8 random/illegal
+floor; multi-token "reasoning" turns (--turn-tokens 5) match the paper's
+setting but need proportionally more steps for the same gain.
+
+    PYTHONPATH=src python examples/train_tictactoe.py [--steps 200]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.core.parallelism_selector import (ContextBuckets,
+                                             ParallelismSelector,
+                                             ProfileEntry)
+from repro.core.resharding import MeshConfig
+from repro.core.stages import EarlTrainer
+from repro.models.registry import build_model
+from repro.optim.adamw import adamw
+from repro.rl.envs import make_env
+
+
+def make_selector():
+    """Single-device CPU run: the selector's mechanics (profile, monitor,
+    switch) are exercised with two degenerate 1-device configs; on real
+    hardware the candidates are true (dp, tp) splits (see launch/mesh.py).
+    """
+    short = MeshConfig("short-ctx", dp=1, tp=1)
+    long_ = MeshConfig("long-ctx", dp=1, tp=1, fsdp=False)
+    measure = lambda cfg, ctx: ProfileEntry(
+        cfg, ctx, tgs=(2.0 if (cfg.name == "long-ctx") == (ctx > 96) else 1.0),
+        feasible=True)
+    return ParallelismSelector([short, long_], measure,
+                               ContextBuckets((96,)), ema_alpha=0.3)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--turn-tokens", type=int, default=1,
+                    help=">1 adds free-form reasoning tokens per turn")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    env = make_env("tictactoe")
+    sel = make_selector()
+    sel.profile()
+
+    trainer = EarlTrainer(
+        model=model, env=env, selector=sel,
+        optimizer=adamw(3e-3, weight_decay=0.0),
+        batch_size=args.batch, max_turns=5,
+        max_turn_tokens=args.turn_tokens,
+        max_context=160, kl_coef=0.02, advantage="reinforce", seed=0)
+    params, opt_state, ref_params = trainer.init_state()
+
+    window = []
+    for step in range(args.steps):
+        params, opt_state, rec = trainer.run_step(step, params, opt_state,
+                                                  ref_params)
+        window.append(rec.mean_return)
+        if step % args.log_every == 0:
+            avg = float(np.mean(window[-20:]))
+            sw = f" [switch {rec.selector_switch}]" if rec.selector_switch \
+                else ""
+            print(f"step {step:4d}  return(avg20) {avg:+.3f}  "
+                  f"ctx {rec.mean_context_len:6.1f}  "
+                  f"trunc {rec.truncated_frac:.2f}  loss {rec.loss:+.4f}"
+                  f"{sw}")
+    first = float(np.mean(window[:20]))
+    last = float(np.mean(window[-20:]))
+    print(f"\nmean return: first-20 {first:+.3f} -> last-20 {last:+.3f}")
+    print(f"selector observed EMA context {sel.ema_context:.1f}, "
+          f"switches: {sel.switch_log}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    InputShape,
+    INPUT_SHAPES,
+    ARCH_REGISTRY,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)

@@ -1,0 +1,28 @@
+from repro.core.resharding import (
+    MeshConfig,
+    logical_to_physical,
+    param_shardings,
+    reshard,
+)
+from repro.core.parallelism_selector import (
+    ParallelismSelector,
+    SelectorPolicy,
+    ContextBuckets,
+)
+from repro.core.data_dispatcher import (
+    DataDispatcher,
+    DispatchReport,
+    MovementPlan,
+    movement_plan,
+    centralized_plan,
+    estimate_latency,
+    all_to_all_resplit,
+)
+from repro.core.train_step import (
+    make_lm_train_step,
+    make_rl_train_step,
+    make_ref_logprob_step,
+    make_serve_step,
+    make_prefill_step,
+)
+from repro.core.stages import EarlTrainer, StepRecord

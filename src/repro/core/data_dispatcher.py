@@ -1,0 +1,311 @@
+"""Data Dispatcher — EARL contribution #2 (paper §2, Fig. 2 ③④⑤).
+
+Intermediate experience batches (tokens, log-probs, rewards, returns, ...)
+must move between RL stages whose parallelism layouts differ — e.g. the
+reference model's ExpPrep layout (dp=16, tp=16) to the trainer's Update
+layout (dp=64, tp=4). Two dispatch strategies:
+
+  - **centralized** (the VeRL-style single-controller baseline): every
+    worker ships its shard to the controller process, which re-slices and
+    re-distributes. Bytes through the bottleneck node = the FULL global
+    batch, twice (gather + scatter). Implemented as ``jax.device_get`` +
+    ``jax.device_put`` — a real host round-trip, wall-clock measurable.
+
+  - **direct** (EARL): each shard moves straight from its source device to
+    every target device that needs a piece of it — a layout-aware
+    all-to-all with no central hop. Implemented as ``jax.device_put`` with
+    the target ``NamedSharding`` (XLA point-to-point resharding across
+    meshes) or, for same-mesh axis moves inside a jitted stage,
+    ``jax.lax.all_to_all`` under ``shard_map`` (see ``all_to_all_resplit``).
+
+The **movement plan** is computed from the source/target sharding index
+maps (``devices_indices_map``): per-device send/receive byte counts, whose
+max is the bottleneck-link traffic — the hardware-independent form of the
+paper's Fig. 4 latency metric. ``estimate_latency`` converts a plan to
+seconds under a link bandwidth (25 Gbps Ethernet for the paper's testbed,
+ICI for the TPU target).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import tree_size_bytes
+
+# The paper's testbed transports (§3.3): TCP over 25 Gbps Ethernet;
+# the TPU target moves the same bytes over ICI.
+ETHERNET_BW = 25e9 / 8          # 25 Gbps -> bytes/s
+ICI_BW = 50e9                   # ~50 GB/s per link
+
+
+# ---------------------------------------------------------------------------
+# Movement plans
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MovementPlan:
+    """Per-device send/recv bytes for one tensor's layout change."""
+
+    total_bytes: int                       # bytes that change owner
+    send_bytes: Dict[int, int]             # device id -> bytes sent
+    recv_bytes: Dict[int, int]             # device id -> bytes received
+
+    @property
+    def bottleneck_bytes(self) -> int:
+        """Max bytes through any single device (the serializing link)."""
+        vals = list(self.send_bytes.values()) + list(self.recv_bytes.values())
+        return max(vals) if vals else 0
+
+    def merge(self, other: "MovementPlan") -> "MovementPlan":
+        send = dict(self.send_bytes)
+        recv = dict(self.recv_bytes)
+        for d, b in other.send_bytes.items():
+            send[d] = send.get(d, 0) + b
+        for d, b in other.recv_bytes.items():
+            recv[d] = recv.get(d, 0) + b
+        return MovementPlan(self.total_bytes + other.total_bytes, send, recv)
+
+
+def _overlap(idx_a, idx_b, shape) -> int:
+    """Element count of the intersection of two index tuples."""
+    n = 1
+    for sl_a, sl_b, dim in zip(idx_a, idx_b, shape):
+        a0, a1 = sl_a.indices(dim)[:2]
+        b0, b1 = sl_b.indices(dim)[:2]
+        n *= max(0, min(a1, b1) - max(a0, b0))
+        if n == 0:
+            return 0
+    return n
+
+
+def movement_plan(shape: Tuple[int, ...], dtype, src: NamedSharding,
+                  dst: NamedSharding) -> MovementPlan:
+    """Layout-aware plan: which bytes must move device->device so that an
+    array sharded ``src`` becomes sharded ``dst``. Data already resident on
+    the right device does not move (the "layout-aware" part — the
+    dispatcher skips the no-op slices a centralized gather would still
+    ship)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    src_map = src.devices_indices_map(tuple(shape))
+    dst_map = dst.devices_indices_map(tuple(shape))
+    # Deduplicate replicated sources: element -> one canonical owner (the
+    # lowest device id holding it); receivers pull from that owner.
+    send: Dict[int, int] = {}
+    recv: Dict[int, int] = {}
+    total = 0
+    src_items = sorted(src_map.items(), key=lambda kv: kv[0].id)
+    for dst_dev, dst_idx in dst_map.items():
+        needed = int(np.prod([sl.indices(d)[1] - sl.indices(d)[0]
+                              for sl, d in zip(dst_idx, shape)]))
+        # subtract what dst_dev already holds
+        if dst_dev in src_map:
+            needed -= _overlap(src_map[dst_dev], dst_idx, shape)
+        if needed <= 0:
+            continue
+        remaining = needed
+        covered: List[Tuple[int, int]] = []
+        for src_dev, src_idx in src_items:
+            if src_dev.id == dst_dev.id:
+                continue
+            ov = _overlap(src_idx, dst_idx, shape)
+            if dst_dev in src_map:
+                ov -= _overlap(src_idx,
+                               _intersect(src_map[dst_dev], dst_idx, shape),
+                               shape)
+                ov = max(ov, 0)
+            if ov <= 0:
+                continue
+            take = min(ov, remaining)
+            send[src_dev.id] = send.get(src_dev.id, 0) + take * itemsize
+            remaining -= take
+            if remaining == 0:
+                break
+        moved = needed - max(remaining, 0)
+        recv[dst_dev.id] = recv.get(dst_dev.id, 0) + moved * itemsize
+        total += moved * itemsize
+    return MovementPlan(total, send, recv)
+
+
+def _intersect(idx_a, idx_b, shape):
+    out = []
+    for sl_a, sl_b, dim in zip(idx_a, idx_b, shape):
+        a0, a1 = sl_a.indices(dim)[:2]
+        b0, b1 = sl_b.indices(dim)[:2]
+        out.append(slice(max(a0, b0), min(a1, b1)))
+    return tuple(out)
+
+
+def centralized_plan(shape, dtype, src: NamedSharding,
+                     dst: NamedSharding, controller: int = 0) -> MovementPlan:
+    """The single-controller baseline plan: every source shard (minus the
+    controller's own) flows INTO the controller, then every target shard
+    (minus the controller's own) flows OUT of it. The controller's link
+    carries ~2x the full global tensor regardless of layout overlap."""
+    itemsize = jnp.dtype(dtype).itemsize
+    total_elems = int(np.prod(shape))
+    total_bytes = total_elems * itemsize
+    src_map = src.devices_indices_map(tuple(shape))
+    dst_map = dst.devices_indices_map(tuple(shape))
+    send: Dict[int, int] = {}
+    recv: Dict[int, int] = {}
+    # gather: each distinct source shard -> controller (replicas skipped:
+    # the controller pulls each element once, from its canonical owner)
+    seen_elems = 0
+    for dev, idx in sorted(src_map.items(), key=lambda kv: kv[0].id):
+        n = int(np.prod([sl.indices(d)[1] - sl.indices(d)[0]
+                         for sl, d in zip(idx, shape)]))
+        if seen_elems >= total_elems:
+            break
+        n = min(n, total_elems - seen_elems)
+        seen_elems += n
+        if dev.id == controller:
+            continue
+        send[dev.id] = send.get(dev.id, 0) + n * itemsize
+        recv[controller] = recv.get(controller, 0) + n * itemsize
+    # scatter: controller -> each target shard
+    for dev, idx in dst_map.items():
+        if dev.id == controller:
+            continue
+        n = int(np.prod([sl.indices(d)[1] - sl.indices(d)[0]
+                         for sl, d in zip(idx, shape)]))
+        send[controller] = send.get(controller, 0) + n * itemsize
+        recv[dev.id] = recv.get(dev.id, 0) + n * itemsize
+    moved = sum(recv.values())
+    return MovementPlan(moved, send, recv)
+
+
+def estimate_latency(plan: MovementPlan, *, bandwidth: float = ETHERNET_BW,
+                     links_parallel: bool = True) -> float:
+    """Seconds to drain the plan. Direct dispatch drains all links in
+    parallel (time = bottleneck link); a centralized plan serializes on
+    the controller's NIC either way."""
+    if links_parallel:
+        return plan.bottleneck_bytes / bandwidth
+    return plan.total_bytes / bandwidth
+
+
+# ---------------------------------------------------------------------------
+# Dispatch execution
+# ---------------------------------------------------------------------------
+
+@dataclass
+class DispatchReport:
+    strategy: str
+    n_leaves: int
+    total_bytes: int                 # global batch bytes
+    moved_bytes: int                 # bytes that changed owner
+    bottleneck_bytes: int            # max bytes through one device
+    wall_time_s: float
+    est_latency_ethernet_s: float
+    est_latency_ici_s: float
+
+    def row(self) -> dict:
+        return self.__dict__.copy()
+
+
+class DataDispatcher:
+    """Executes + accounts inter-stage batch movement (Fig. 2 ③④⑤)."""
+
+    def __init__(self, *, controller: int = 0):
+        self.controller = controller
+        self.log: List[DispatchReport] = []
+
+    # -- plans --------------------------------------------------------------
+    def plan(self, batch, src_shardings, dst_shardings,
+             *, strategy: str) -> MovementPlan:
+        plans = []
+        leaves = zip(jax.tree.leaves(batch),
+                     jax.tree.leaves(src_shardings),
+                     jax.tree.leaves(dst_shardings))
+        for x, s_src, s_dst in leaves:
+            if strategy == "centralized":
+                p = centralized_plan(x.shape, x.dtype, s_src, s_dst,
+                                     self.controller)
+            else:
+                p = movement_plan(x.shape, x.dtype, s_src, s_dst)
+            plans.append(p)
+        out = plans[0]
+        for p in plans[1:]:
+            out = out.merge(p)
+        return out
+
+    # -- execution ----------------------------------------------------------
+    def dispatch_centralized(self, batch, dst_shardings):
+        """Baseline: host round-trip through the controller process."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), batch)
+        return jax.tree.map(jax.device_put, host, dst_shardings)
+
+    def dispatch_direct(self, batch, dst_shardings):
+        """EARL: device-to-device resharding, no central hop. Works across
+        meshes (the selector's config switches change the mesh)."""
+        return jax.tree.map(jax.device_put, batch, dst_shardings)
+
+    def dispatch(self, batch, dst_shardings, *, strategy: str = "direct",
+                 src_shardings=None, timed: bool = True):
+        """Move ``batch`` to ``dst_shardings``; append a DispatchReport."""
+        if src_shardings is None:
+            src_shardings = jax.tree.map(lambda x: x.sharding, batch)
+        plan = self.plan(batch, src_shardings, dst_shardings,
+                         strategy=strategy)
+        t0 = time.perf_counter()
+        if strategy == "centralized":
+            out = self.dispatch_centralized(batch, dst_shardings)
+        elif strategy == "direct":
+            out = self.dispatch_direct(batch, dst_shardings)
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+        if timed:
+            jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        links_parallel = strategy != "centralized"
+        rep = DispatchReport(
+            strategy=strategy,
+            n_leaves=len(jax.tree.leaves(batch)),
+            total_bytes=tree_size_bytes(batch),
+            moved_bytes=plan.total_bytes,
+            bottleneck_bytes=plan.bottleneck_bytes,
+            wall_time_s=wall,
+            est_latency_ethernet_s=estimate_latency(
+                plan, bandwidth=ETHERNET_BW, links_parallel=links_parallel),
+            est_latency_ici_s=estimate_latency(
+                plan, bandwidth=ICI_BW, links_parallel=links_parallel),
+        )
+        self.log.append(rep)
+        return out, rep
+
+
+# ---------------------------------------------------------------------------
+# In-graph all-to-all re-split (same-mesh layout moves inside jit)
+# ---------------------------------------------------------------------------
+
+def all_to_all_resplit(x, mesh: Mesh, axis_name: str, *, split_dim: int,
+                       concat_dim: int):
+    """``jax.lax.all_to_all`` under shard_map: re-partition a batch from
+    sharding along ``concat_dim`` to sharding along ``split_dim`` without
+    any gather — the paper's "replace the all-gather-and-scatter dispatch
+    logic with an all-to-all operation". Used when ExpPrep produces
+    sequence-sharded log-probs and Update wants batch-sharded rows (or
+    vice versa)."""
+    from jax.experimental.shard_map import shard_map
+
+    in_spec = _spec_on_dim(x.ndim, concat_dim, axis_name)
+    out_spec = _spec_on_dim(x.ndim, split_dim, axis_name)
+
+    def body(xs):
+        return jax.lax.all_to_all(xs, axis_name, split_axis=split_dim,
+                                  concat_axis=concat_dim, tiled=True)
+
+    return shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                     out_specs=out_spec)(x)
+
+
+def _spec_on_dim(ndim: int, dim: int, axis_name: str) -> P:
+    spec = [None] * ndim
+    spec[dim] = axis_name
+    return P(*spec)

@@ -1,0 +1,153 @@
+"""Mesh configs, logical->physical sharding rules, live weight resharding.
+
+This is the substrate the Parallelism Selector acts on: a ``MeshConfig``
+names a (pod, data, model) factorization of the same physical device set;
+switching configs re-binds every parameter to a new ``NamedSharding`` via
+``jax.device_put`` — XLA lowers that to the minimal all-to-all /
+collective-permute exchange, which is the TPU-native analogue of the
+paper's Megatron TP-degree switch (DESIGN.md §2).
+
+Sharding rules include the divisibility fallback of DESIGN.md §9: a tensor
+dim that doesn't divide by the mesh axis size is replicated (e.g. qwen2's
+14 heads on a 16-way model axis) with the event recorded for logs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axis (DESIGN.md §9). "data" entries are the
+# FSDP dimension; "model" entries are the TP dimension.
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert_mlp": "model",
+    "experts": "model",        # sharded only when divisible (grok: no, 8<16)
+    "embed": "data",           # FSDP over the data axis
+    "ssm_inner": "model",
+    "ssm_heads": None,
+    "layers": None,
+}
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    """A named factorization of the device set into (pod, data, model)."""
+
+    name: str
+    dp: int
+    tp: int
+    pods: int = 1
+    fsdp: bool = True          # shard "embed" dims over the data axis
+
+    @property
+    def n_devices(self) -> int:
+        return self.pods * self.dp * self.tp
+
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.pods > 1 else ("data",
+                                                               "model")
+
+    def shape(self) -> Tuple[int, ...]:
+        return ((self.pods, self.dp, self.tp) if self.pods > 1
+                else (self.dp, self.tp))
+
+    def batch_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.pods > 1 else ("data",)
+
+    def make_mesh(self, devices: Optional[Sequence] = None) -> Mesh:
+        if devices is None:
+            devices = jax.devices()
+        devices = np.asarray(devices[: self.n_devices]).reshape(self.shape())
+        return Mesh(devices, self.axis_names())
+
+
+def _axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return mesh.shape[axis] if axis in mesh.axis_names else 1
+
+
+def logical_to_physical(shape, logical_axes, mesh: Mesh,
+                        rules: Optional[Dict[str, Optional[str]]] = None,
+                        *, fsdp: bool = True,
+                        fallbacks: Optional[list] = None) -> NamedSharding:
+    """Map a tensor's logical axes to a NamedSharding on ``mesh``.
+
+    Divisibility fallback: if dim % axis_size != 0, the dim replicates and
+    the (axes, dim, axis) triple is appended to ``fallbacks`` if given.
+    """
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    if not fsdp:
+        rules["embed"] = None
+    spec = []
+    used = set()
+    for dim, lax_name in zip(shape, logical_axes):
+        target = rules.get(lax_name) if lax_name else None
+        if target is None or target not in mesh.axis_names:
+            spec.append(None)
+            continue
+        size = _axis_size(mesh, target)
+        if size <= 1 or dim % size != 0 or target in used:
+            if fallbacks is not None and size > 1 and dim % size != 0:
+                fallbacks.append((tuple(logical_axes), dim, target))
+            spec.append(None)
+            continue
+        used.add(target)
+        spec.append(target)
+    return NamedSharding(mesh, P(*spec))
+
+
+def param_shardings(defs_or_model, mesh: Mesh, *, rules=None, fsdp=True,
+                    fallbacks=None):
+    """ParamDef tree (or Model) -> matching tree of NamedSharding."""
+    from repro.models.param import ParamDef, logical_specs
+
+    defs = getattr(defs_or_model, "defs", defs_or_model)
+
+    def one(d: ParamDef):
+        return logical_to_physical(d.shape, d.axes, mesh, rules, fsdp=fsdp,
+                                   fallbacks=fallbacks)
+
+    return jax.tree.map(one, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def batch_sharding(mesh: Mesh, ndim: int, *, batch_dim: int = 0,
+                   seq_dim: Optional[int] = None,
+                   seq_axis: Optional[str] = None) -> NamedSharding:
+    """Shard the batch dim over (pod, data); optionally the sequence dim
+    (long_500k decode uses seq-sharded KV caches; DESIGN.md §5)."""
+    axes: list = [None] * ndim
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    axes[batch_dim] = batch_axes if batch_axes else None
+    if seq_dim is not None and seq_axis is not None:
+        axes[seq_dim] = seq_axis
+    return NamedSharding(mesh, P(*axes))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def reshard(tree, shardings):
+    """Re-bind every leaf to a new sharding (XLA emits the minimal
+    collective exchange). This is the selector's switch primitive."""
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def reshard_bytes_moved(tree, src_cfg: MeshConfig, dst_cfg: MeshConfig)\
+        -> int:
+    """Analytic bytes-through-ICI for a config switch: every param whose
+    spec changes moves (1 - overlap) of its bytes per device group. Upper
+    bound: full param bytes when TP degree changes."""
+    from repro.utils.tree import tree_size_bytes
+    if (src_cfg.dp, src_cfg.tp) == (dst_cfg.dp, dst_cfg.tp):
+        return 0
+    return tree_size_bytes(tree)

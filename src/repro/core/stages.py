@@ -1,0 +1,171 @@
+"""The EARL RL stage graph (paper Fig. 2).
+
+    ┌─► [selector hook ①] Rollout (policy decode, multi-turn env loop)
+    │        │ experience batch (tokens, logprobs, rewards, context stats)
+    │   [selector hook ②] Experience Preparation
+    │        │   reference log-probs (+ value / reward models when present)
+    │        │   advantage estimation (REINFORCE, paper §3.1)
+    │   [dispatcher ③④⑤]  layout-aware move to the Update layout
+    │        ▼
+    └── Model Update (policy-gradient step)
+
+``EarlTrainer`` wires the substrate (model, env, rollout engine, optimizer)
+to the two EARL components. Every stage transition is observable: per-step
+``StepRecord`` captures context-length growth (Fig. 1), selector switches
+(Fig. 3) and dispatch reports (Fig. 4).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.data_dispatcher import DataDispatcher, DispatchReport
+from repro.core.parallelism_selector import ParallelismSelector
+from repro.core.train_step import make_ref_logprob_step, make_rl_train_step
+from repro.optim.adamw import Optimizer, adamw
+from repro.rl.algo import reinforce_advantages, group_relative_advantages
+from repro.rl.experience import ExperienceBatch
+from repro.rl.rollout import RolloutEngine, RolloutStats
+
+
+@dataclass
+class StepRecord:
+    step: int
+    mean_return: float
+    mean_context_len: float
+    mean_turn_len: float
+    truncated_frac: float
+    loss: float
+    kl: float = 0.0
+    selector_switch: Optional[dict] = None
+    dispatch: Optional[dict] = None
+    wall_time_s: float = 0.0
+
+
+@dataclass
+class EarlTrainer:
+    """End-to-end agentic RL driver implementing the Fig. 2 loop."""
+
+    model: Any                              # repro.models.Model
+    env: Any
+    optimizer: Optional[Optimizer] = None
+    selector: Optional[ParallelismSelector] = None
+    dispatcher: Optional[DataDispatcher] = None
+    dispatch_strategy: str = "direct"
+    batch_size: int = 8
+    max_turns: int = 3
+    max_turn_tokens: int = 6
+    max_context: int = 192
+    kl_coef: float = 0.0
+    clip_eps: float = 0.0
+    advantage: str = "reinforce"            # "reinforce" | "group"
+    group_size: int = 4
+    temperature: float = 1.0
+    seed: int = 0
+
+    history: List[StepRecord] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.optimizer = self.optimizer or adamw(3e-4, weight_decay=0.0)
+        self.dispatcher = self.dispatcher or DataDispatcher()
+        self.rollout = RolloutEngine(
+            self.model, self.env, max_turns=self.max_turns,
+            max_turn_tokens=self.max_turn_tokens,
+            max_context=self.max_context, temperature=self.temperature)
+        self._ref_step = jax.jit(make_ref_logprob_step(self.model))
+        self._train_step = jax.jit(make_rl_train_step(
+            self.model, self.optimizer, clip_eps=self.clip_eps,
+            kl_coef=self.kl_coef))
+        self._rng = jax.random.PRNGKey(self.seed)
+
+    # ------------------------------------------------------------------
+    def init_state(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.seed)
+        params = self.model.init(rng)
+        opt_state = self.optimizer.init(params)
+        ref_params = params if self.kl_coef > 0 else None
+        return params, opt_state, ref_params
+
+    def _next_rng(self):
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    # ------------------------------------------------------------------
+    def run_step(self, step: int, params, opt_state, ref_params=None,
+                 dst_shardings=None):
+        """One full Fig. 2 iteration. Returns (params, opt_state, record)."""
+        t0 = time.perf_counter()
+
+        # [hook ①] — selector may re-configure parallelism before Rollout
+        switch = None
+        if self.selector is not None and self.selector.policy is not None:
+            sw = self.selector.maybe_switch(step)
+            if sw is not None:
+                switch = {"from": sw[0].name, "to": sw[1].name,
+                          "ema_context": self.selector.ema_context}
+
+        # ① Rollout
+        exp, stats = self.rollout.run(params, self._next_rng(),
+                                      self.batch_size)
+
+        # feed the monitor (the paper's "averaged context length")
+        if self.selector is not None:
+            self.selector.observe(stats.mean_context_len)
+
+        # [hook ②] + ② Experience Preparation
+        kl = 0.0
+        if ref_params is not None:
+            ref_lp = self._ref_step(ref_params, exp.tokens)
+            exp = exp.with_(ref_logprobs=ref_lp)
+        if self.advantage == "group":
+            adv = group_relative_advantages(exp.rewards, self.group_size)
+        else:
+            adv = reinforce_advantages(exp.rewards)
+        exp = exp.with_(advantages=adv)
+
+        # ③④⑤ Dispatch to the Update layout
+        dispatch_row = None
+        if dst_shardings is not None:
+            exp, rep = self.dispatcher.dispatch(
+                exp, dst_shardings, strategy=self.dispatch_strategy)
+            dispatch_row = rep.row()
+
+        # Model Update
+        params, opt_state, metrics = self._train_step(params, opt_state, exp)
+        if "kl" in metrics:
+            kl = float(metrics["kl"])
+
+        rec = StepRecord(
+            step=step,
+            mean_return=stats.mean_return,
+            mean_context_len=stats.mean_context_len,
+            mean_turn_len=stats.mean_turn_len,
+            truncated_frac=float(np.mean(stats.truncated)),
+            loss=float(metrics["loss"]),
+            kl=kl,
+            selector_switch=switch,
+            dispatch=dispatch_row,
+            wall_time_s=time.perf_counter() - t0,
+        )
+        self.history.append(rec)
+        return params, opt_state, rec
+
+    # ------------------------------------------------------------------
+    def train(self, n_steps: int, *, params=None, opt_state=None,
+              ref_params=None, verbose: bool = False):
+        if params is None:
+            params, opt_state, ref_params = self.init_state()
+        for step in range(n_steps):
+            params, opt_state, rec = self.run_step(
+                step, params, opt_state, ref_params)
+            if verbose:
+                print(f"step {rec.step:4d}  return {rec.mean_return:+.3f}  "
+                      f"ctx {rec.mean_context_len:6.1f}  "
+                      f"trunc {rec.truncated_frac:.2f}  "
+                      f"loss {rec.loss:+.4f}")
+        return params, opt_state, self.history

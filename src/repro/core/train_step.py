@@ -1,0 +1,179 @@
+"""Stage programs: the jittable computations EARL schedules.
+
+Three program families, one per Fig. 2 stage kind:
+
+  - ``make_lm_train_step``  — supervised next-token train step (the dry-run's
+    ``train_4k`` shape and quickstart warm-up): cross-entropy + AdamW.
+  - ``make_rl_train_step``  — the Model Update stage: policy-gradient loss
+    over an ``ExperienceBatch`` (REINFORCE / PPO-clip per rl.algo).
+  - ``make_ref_logprob_step`` — the Experience Preparation stage: a pure
+    forward pass producing per-token reference log-probs (the tensor whose
+    dispatch the paper optimizes in §3.3).
+
+Each factory returns a *pure function* suitable for ``jax.jit`` with
+explicit in/out shardings — the Parallelism Selector re-jits the same
+function under different meshes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer, apply_updates
+from repro.rl.algo import policy_gradient_loss, token_logprobs
+from repro.rl.experience import ExperienceBatch
+
+
+def lm_loss(model, params, tokens, labels, *, extra=None, attn_impl="xla"):
+    """Masked next-token cross-entropy. labels<0 positions are ignored."""
+    logits, aux = model.forward(params, tokens, extra=extra,
+                                attn_impl=attn_impl)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    # one-hot contraction, not take_along_axis: stays partitioned over the
+    # vocab-sharded logits (see rl.algo.token_logprobs).
+    tok_lp = token_logprobs(logits, safe)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(tok_lp * mask) / denom
+    if "aux_loss" in aux:
+        loss = loss + aux["aux_loss"]
+    return loss, {"lm_loss": loss, "n_tokens": denom}
+
+
+def make_lm_train_step(model, optimizer: Optimizer, *, attn_impl="xla",
+                       microbatch: int = 0):
+    """(params, opt_state, tokens, labels[, extra]) -> (params, opt_state,
+    metrics). tokens/labels: (B, S) int32; labels are tokens shifted left
+    by the caller (or identical — we shift internally when labels is None).
+
+    microbatch > 1 enables gradient accumulation (§Perf-D): the batch is
+    split into ``microbatch`` slices scanned sequentially, so live
+    activation memory scales with B/microbatch while gradients accumulate
+    in float32 (one optimizer step per global batch, numerics unchanged up
+    to summation order). This is the feasibility lever for llama3-405b
+    train_4k, whose full-batch activations exceed HBM ~50x.
+    """
+
+    def grads_of(p, tokens, labels, extra):
+        def loss_fn(p_):
+            return lm_loss(model, p_, tokens, labels, extra=extra,
+                           attn_impl=attn_impl)
+        return jax.value_and_grad(loss_fn, has_aux=True)(p)
+
+    def train_step(params, opt_state, tokens, labels, extra=None):
+        B = tokens.shape[0]
+        if microbatch > 1 and B % microbatch == 0:
+            mb = B // microbatch
+            toks = tokens.reshape(microbatch, mb, *tokens.shape[1:])
+            labs = labels.reshape(microbatch, mb, *labels.shape[1:])
+            extras = (jax.tree.map(
+                lambda x: x.reshape(microbatch, mb, *x.shape[1:]), extra)
+                if extra is not None else None)
+
+            def accum(carry, sl):
+                g_acc, loss_acc = carry
+                ex = sl[2] if extras is not None else None
+                (loss, _), g = grads_of(params, sl[0], sl[1], ex)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (toks, labs) + ((extras,) if extras is not None else ())
+            (grads, loss_sum), _ = jax.lax.scan(accum, (g0, 0.0), xs)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss_sum / microbatch
+            metrics = {"lm_loss": loss}
+        else:
+            (loss, metrics), grads = grads_of(params, tokens, labels, extra)
+        updates, opt_state2 = optimizer.update(grads, opt_state, params)
+        params2 = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_rl_train_step(model, optimizer: Optimizer, *, clip_eps: float = 0.0,
+                       kl_coef: float = 0.0, attn_impl="xla"):
+    """The Model Update stage program (Fig. 2, after dispatch ⑤).
+
+    Consumes an ``ExperienceBatch`` whose ``advantages`` /
+    ``ref_logprobs`` were produced by the ExpPrep stage and moved here by
+    the Data Dispatcher. Predictions at position t score token t+1, so all
+    per-token tensors are shifted off by one inside.
+    """
+
+    def train_step(params, opt_state, batch: ExperienceBatch, extra=None):
+        def loss_fn(p):
+            logits, aux = model.forward(p, batch.tokens, extra=extra,
+                                        attn_impl=attn_impl)
+            lp = token_logprobs(logits[:, :-1], batch.tokens[:, 1:])
+            mask = batch.loss_mask[:, 1:]
+            old_lp = batch.logprobs[:, 1:] if clip_eps > 0 else None
+            ref_lp = batch.ref_logprobs[:, 1:] if kl_coef > 0 else None
+            loss, metrics = policy_gradient_loss(
+                lp, batch.advantages, mask, old_logprobs=old_lp,
+                clip_eps=clip_eps, ref_logprobs=ref_lp, kl_coef=kl_coef)
+            if "aux_loss" in aux:
+                loss = loss + aux["aux_loss"]
+                metrics["aux_loss"] = aux["aux_loss"]
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        updates, opt_state2 = optimizer.update(grads, opt_state, params)
+        params2 = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_ref_logprob_step(model, *, attn_impl="xla"):
+    """Experience Preparation stage program: reference-model forward pass.
+
+    (params, tokens[, extra]) -> (B, T) log p_ref(token_t | <t), with
+    position 0 zero-filled (no prediction for the first token). This is
+    the log-probability tensor of paper §3.3 — the one the Data Dispatcher
+    ships directly to the update workers.
+    """
+
+    def ref_step(params, tokens, extra=None):
+        logits, _ = model.forward(params, tokens, extra=extra,
+                                  attn_impl=attn_impl)
+        lp = token_logprobs(logits[:, :-1], tokens[:, 1:])
+        B = tokens.shape[0]
+        return jnp.concatenate([jnp.zeros((B, 1), lp.dtype), lp], axis=1)
+
+    return ref_step
+
+
+def make_serve_step(model, *, attn_impl="xla"):
+    """Decode-shape stage program: ONE new token against a filled KV cache
+    (the ``decode_32k`` / ``long_500k`` dry-run shapes lower this)."""
+
+    def serve_step(params, token, cache, extra=None):
+        logits, cache2 = model.decode_step(params, token, cache, extra=extra,
+                                           attn_impl=attn_impl)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache2
+
+    return serve_step
+
+
+def make_prefill_step(model, *, attn_impl="xla"):
+    """Prefill-shape stage program (``prefill_32k``)."""
+
+    def prefill_step(params, tokens, cache, extra=None):
+        logits, cache2 = model.prefill(params, tokens, cache, extra=extra,
+                                       attn_impl=attn_impl)
+        return logits, cache2
+
+    return prefill_step

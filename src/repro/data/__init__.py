@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    TokenStream,
+    SyntheticLMDataset,
+    pack_documents,
+    make_batches,
+    shard_batch,
+)

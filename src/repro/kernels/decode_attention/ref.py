@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the decode attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q: (B,H,hd); k,v: (B,S,KV,hd); valid: (B,S) bool -> (B,H,hd)."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, group, hd)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)       # (B,KV,S,hd)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgh,bksh->bkgs", qf, kf) / jnp.sqrt(hd)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, vf)
+    return out.reshape(B, H, hd).astype(q.dtype)

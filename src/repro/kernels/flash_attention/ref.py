@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,S,H,hd); k,v: (B,Sk,KV,hd). Returns (B,S,H,hd) in q.dtype.
+
+    Unfused softmax(QK^T)V with GQA broadcast — the numerical ground truth
+    the kernel must match (float32 softmax, output cast back).
+    """
+    B, S, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    qf = q.astype(jnp.float32).reshape(B, S, KV, group, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qf, kf) / jnp.sqrt(hd)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((S, Sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window > 0:
+        ok &= kpos > (qpos - window)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the SSD scan kernel.
+
+The oracle IS the model's own chunked SSD implementation
+(models/mamba.ssd_chunked) — the kernel must agree with what the
+mamba2/zamba2 architectures actually compute.
+"""
+from repro.models.mamba import ssd_chunked as ssd_ref  # noqa: F401

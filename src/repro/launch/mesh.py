@@ -1,0 +1,226 @@
+"""Production meshes, input specs, and sharding assembly for the dry-run.
+
+``make_production_mesh`` builds the target topology from the brief:
+single-pod (16, 16) = 256 chips with ("data", "model") axes, and the
+2-pod (2, 16, 16) = 512-chip variant with a leading "pod" axis that
+extends data parallelism (DESIGN.md §9).
+
+``input_specs(arch, shape_name)`` returns ShapeDtypeStruct stand-ins for
+every input of the stage program that shape lowers (train / prefill /
+decode), so the 40-combo dry-run never allocates real arrays.
+
+``stage_shardings`` maps those inputs onto a mesh: parameters via the
+logical-axis rules (resharding.py), batches over (pod, data), KV caches
+batch→data and seq→model (kv-head sharding when divisible) — the
+footprint-critical decision for the 32K/500K decode shapes.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                get_config, with_sliding_window)
+from repro.core.resharding import (MeshConfig, logical_to_physical,
+                                   param_shardings)
+from repro.models.registry import Model, build_model
+from repro.utils.tree import tree_flatten_with_names
+
+# Sub-quadratic long-context policy (DESIGN.md §5): dense/MoE/VLM/audio
+# archs decode long_500k with a sliding window over the cache.
+LONG_CONTEXT_WINDOW = 8192
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def production_mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MeshConfig(name="2x16x16" if multi_pod else "16x16",
+                      dp=16, tp=16, pods=2 if multi_pod else 1)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Arch config resolution per input shape
+# ---------------------------------------------------------------------------
+
+def arch_config_for_shape(arch_id: str, shape: InputShape) -> ModelConfig:
+    """Returns the arch config, applying the long-context policy: dense
+    attention archs get a sliding-window decode variant for long_500k
+    (SSM/hybrid run it natively — their state is O(1) in context)."""
+    cfg = get_config(arch_id)
+    if (shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid")
+            and cfg.sliding_window == 0):
+        cfg = with_sliding_window(cfg, LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct, no allocation)
+# ---------------------------------------------------------------------------
+
+def _abstract_cache(model: Model, batch: int, s_max: int):
+    """Cache ShapeDtypeStructs via eval_shape (never materialized)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, s_max, dtype=jnp.bfloat16))
+
+
+def _abstract_opt_state(abstract_params):
+    from repro.optim.adamw import OptState
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    mu=jax.tree.map(f32, abstract_params),
+                    nu=jax.tree.map(f32, abstract_params))
+
+
+def input_specs(arch_id: str, shape_name: str) -> Dict[str, Any]:
+    """All abstract inputs for the (arch, shape) stage program.
+
+    train:   {params, opt_state, tokens, labels, extra}
+    prefill: {params, tokens, cache, extra}
+    decode:  {params, token, cache, extra}
+    """
+    shape = INPUT_SHAPES[shape_name]
+    cfg = arch_config_for_shape(arch_id, shape)
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    params = model.abstract()
+    extra = model.input_extras(B) or None
+    if shape.kind == "train":
+        return {
+            "kind": "train", "model": model,
+            "params": params,
+            "opt_state": _abstract_opt_state(params),
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "extra": extra,
+        }
+    if shape.kind == "prefill":
+        return {
+            "kind": "prefill", "model": model,
+            "params": params,
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "cache": _abstract_cache(model, B, S),
+            "extra": extra,
+        }
+    return {
+        "kind": "decode", "model": model,
+        "params": params,
+        "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "cache": _abstract_cache(model, B, S),
+        "extra": extra,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+def _batch_spec(mesh: Mesh, shape_or_ndim, *, batch_dim: int = 0
+                ) -> NamedSharding:
+    """Batch sharding over (pod, data) with a divisibility fallback —
+    long_500k's global_batch=1 replicates rather than erroring."""
+    if isinstance(shape_or_ndim, int):
+        dims = None
+        ndim = shape_or_ndim
+    else:
+        dims = tuple(shape_or_ndim)
+        ndim = len(dims)
+    spec: list = [None] * ndim
+    ba = batch_axes(mesh)
+    size = 1
+    for a in ba:
+        size *= mesh.shape[a]
+    if ba and (dims is None or dims[batch_dim] % size == 0):
+        spec[batch_dim] = ba if len(ba) > 1 else ba[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_shardings(cache_abstract, mesh: Mesh, *, seq_len: int,
+                    n_kv_heads: int):
+    """Per-leaf cache shardings by structural rules.
+
+    KV entries (rank 5: sites/layers, B, S, KV, hd): batch→data; then
+    kv-heads→model when divisible, else seq→model when divisible (the
+    footprint rule that fits 1 TB 32K caches on 16 GiB chips).
+    Mamba conv (L,B,W,CH): CH→model when divisible. Mamba ssm state
+    (L,B,H,P,N): H→model when divisible. pos (B,)→data.
+    """
+    tp = mesh.shape.get("model", 1)
+    ba = batch_axes(mesh)
+    batch_entry = ba if len(ba) > 1 else (ba[0] if ba else None)
+    dp = 1
+    for a in ba:
+        dp *= mesh.shape[a]
+
+    named, treedef = tree_flatten_with_names(cache_abstract)
+    out = []
+    for name, leaf in named:
+        nd = leaf.ndim
+        spec: list = [None] * nd
+        if nd >= 2 and leaf.shape[1] % dp == 0:
+            spec[1] = batch_entry
+        if nd == 1 and leaf.shape[0] % dp == 0:      # pos (B,)
+            spec[0] = batch_entry
+        leafname = name.rsplit("/", 1)[-1]
+        if nd == 5 and leafname in ("k", "v"):
+            S, KV = leaf.shape[2], leaf.shape[3]
+            if KV % tp == 0 and KV >= tp:
+                spec[3] = "model"
+            elif S % tp == 0 and S >= tp:
+                spec[2] = "model"
+        elif nd == 4 and leafname == "conv":
+            if leaf.shape[3] % tp == 0:
+                spec[3] = "model"
+        elif nd == 5 and leafname == "ssm":
+            if leaf.shape[2] % tp == 0 and leaf.shape[2] >= tp:
+                spec[2] = "model"
+            elif leaf.shape[3] % tp == 0 and leaf.shape[3] >= tp:
+                spec[3] = "model"
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def stage_shardings(specs: Dict[str, Any], mesh: Mesh, *, fsdp: bool = True,
+                    rules=None, fallbacks=None) -> Dict[str, Any]:
+    """Shardings tree matching ``input_specs`` output (minus 'kind'/'model').
+    """
+    model: Model = specs["model"]
+    p_sh = param_shardings(model, mesh, rules=rules, fsdp=fsdp,
+                           fallbacks=fallbacks)
+    out: Dict[str, Any] = {"params": p_sh}
+    if specs["kind"] == "train":
+        from repro.optim.adamw import OptState
+        f32_sh = jax.tree.map(lambda s: s, p_sh)     # same layout, f32
+        out["opt_state"] = OptState(
+            step=NamedSharding(mesh, P()), mu=f32_sh, nu=f32_sh)
+        out["tokens"] = _batch_spec(mesh, specs["tokens"].shape)
+        out["labels"] = _batch_spec(mesh, specs["labels"].shape)
+    elif specs["kind"] == "prefill":
+        out["tokens"] = _batch_spec(mesh, specs["tokens"].shape)
+        out["cache"] = cache_shardings(
+            specs["cache"], mesh, seq_len=specs["tokens"].shape[1],
+            n_kv_heads=model.cfg.n_kv_heads)
+    else:
+        out["token"] = _batch_spec(mesh, specs["token"].shape)
+        out["cache"] = cache_shardings(
+            specs["cache"], mesh,
+            seq_len=jax.tree.leaves(specs["cache"])[0].shape[2]
+            if jax.tree.leaves(specs["cache"])[0].ndim >= 3 else 0,
+            n_kv_heads=model.cfg.n_kv_heads)
+    if specs.get("extra"):
+        out["extra"] = {k: _batch_spec(mesh, v.shape)
+                        for k, v in specs["extra"].items()}
+    return out

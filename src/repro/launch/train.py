@@ -1,0 +1,96 @@
+"""End-to-end agentic RL training driver (the paper's Fig. 2 loop, live).
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch qwen2-0.5b --env tictactoe --steps 50 --batch 16
+
+Runs the full EARL system on the available devices: multi-turn rollouts,
+experience preparation with a frozen reference model, layout-aware
+dispatch, policy-gradient update, with the Parallelism Selector monitoring
+context growth (on CPU the selector profiles via the compiled cost model).
+Writes a JSONL training log usable by benchmarks/bench_context_growth.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import get_smoke_config
+from repro.core.stages import EarlTrainer
+from repro.models.registry import build_model
+from repro.optim.adamw import adamw
+from repro.rl.envs import make_env
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="EARL agentic RL training")
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--env", default="tictactoe",
+                    choices=["tictactoe", "connect_four"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--max-turns", type=int, default=3)
+    ap.add_argument("--max-turn-tokens", type=int, default=6)
+    ap.add_argument("--max-context", type=int, default=160)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--kl-coef", type=float, default=0.05)
+    ap.add_argument("--clip-eps", type=float, default=0.2)
+    ap.add_argument("--advantage", default="reinforce",
+                    choices=["reinforce", "group"])
+    ap.add_argument("--dispatch", default="direct",
+                    choices=["direct", "centralized"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log", default="train_log.jsonl")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    args = ap.parse_args(argv)
+
+    # CPU containers always use the smoke config; the full config is for
+    # real accelerators (it would not fit host memory here).
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    env = make_env(args.env)
+
+    trainer = EarlTrainer(
+        model=model, env=env,
+        optimizer=adamw(args.lr, weight_decay=0.0),
+        dispatch_strategy=args.dispatch,
+        batch_size=args.batch, max_turns=args.max_turns,
+        max_turn_tokens=args.max_turn_tokens, max_context=args.max_context,
+        kl_coef=args.kl_coef, clip_eps=args.clip_eps,
+        advantage=args.advantage, seed=args.seed)
+
+    params, opt_state, ref_params = trainer.init_state()
+    log_path = Path(args.log)
+    t0 = time.time()
+    with log_path.open("w") as f:
+        for step in range(args.steps):
+            params, opt_state, rec = trainer.run_step(
+                step, params, opt_state, ref_params)
+            row = {
+                "step": rec.step,
+                "return": rec.mean_return,
+                "context_len": rec.mean_context_len,
+                "turn_len": rec.mean_turn_len,
+                "truncated_frac": rec.truncated_frac,
+                "loss": rec.loss,
+                "kl": rec.kl,
+                "wall_s": rec.wall_time_s,
+            }
+            f.write(json.dumps(row) + "\n")
+            print(f"step {step:4d}  return {rec.mean_return:+.3f}  "
+                  f"ctx {rec.mean_context_len:6.1f}  "
+                  f"turn {rec.mean_turn_len:4.1f}  "
+                  f"trunc {rec.truncated_frac:.2f}  "
+                  f"loss {rec.loss:+.4f}  kl {rec.kl:.4f}")
+    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s "
+          f"-> {log_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,233 @@
+"""Whisper-style encoder-decoder audio backbone. [arXiv:2212.04356]
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+STUBBED: ``input_specs`` feeds precomputed frame embeddings of shape
+(B, n_audio_frames, d_model). The implemented backbone is the encoder stack
+(bidirectional) + decoder stack (causal self-attn + cross-attn per layer).
+
+Adaptations vs. the published model (recorded in DESIGN.md): RoPE replaces
+sinusoidal/learned absolute positions (so the assigned 32K/512K decode stress
+shapes don't require multi-GiB position tables), and SwiGLU replaces GELU
+MLPs for uniformity with the rest of the model zoo.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import pdef
+
+
+def encoder_block_defs(cfg: ModelConfig):
+    n = cfg.n_encoder_layers
+    return {
+        "ln1": pdef((n, cfg.d_model), ("layers", "embed"), "ones"),
+        "attn": L.attention_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim_, layers=n),
+        "ln2": pdef((n, cfg.d_model), ("layers", "embed"), "ones"),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, layers=n),
+    }
+
+
+def decoder_block_defs(cfg: ModelConfig):
+    n = cfg.n_layers
+    return {
+        "ln1": pdef((n, cfg.d_model), ("layers", "embed"), "ones"),
+        "self_attn": L.attention_defs(cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.head_dim_, layers=n),
+        "ln_x": pdef((n, cfg.d_model), ("layers", "embed"), "ones"),
+        "cross_attn": L.attention_defs(cfg.d_model, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.head_dim_,
+                                       layers=n),
+        "ln2": pdef((n, cfg.d_model), ("layers", "embed"), "ones"),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, layers=n),
+    }
+
+
+def model_defs(cfg: ModelConfig):
+    return {
+        "embedding": L.embedding_defs(cfg.vocab_size, cfg.d_model),
+        "encoder": encoder_block_defs(cfg),
+        "enc_ln_f": pdef((cfg.d_model,), ("embed",), "ones"),
+        "decoder": decoder_block_defs(cfg),
+        "ln_f": pdef((cfg.d_model,), ("embed",), "ones"),
+        "lm_head": pdef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                        "scaled"),
+    }
+
+
+def _cross_kv(p, enc_out, n_kv_heads, head_dim):
+    B, F, _ = enc_out.shape
+    k = jnp.einsum("bfd,dh->bfh", enc_out, p["wk"]).reshape(
+        B, F, n_kv_heads, head_dim)
+    v = jnp.einsum("bfd,dh->bfh", enc_out, p["wv"]).reshape(
+        B, F, n_kv_heads, head_dim)
+    return k, v
+
+
+def encode(cfg: ModelConfig, params, frames, *, attn_impl="xla"):
+    """frames: (B, F, D) stubbed conv-frontend embeddings -> (B, F, D)."""
+    x = frames.astype(params["enc_ln_f"].dtype)
+
+    def body(carry, layer_p):
+        def block(cfg_, p, x):
+            h = L.rms_norm(x, p["ln1"], cfg_.rms_eps)
+            # bidirectional: cross_kv trick with self-derived k/v = no mask
+            B, S, _ = h.shape
+            q, k, v = L._project_qkv(p["attn"], h, cfg_.n_heads,
+                                     cfg_.n_kv_heads, cfg_.head_dim_)
+            pos = jnp.arange(S)[None, :]
+            q = L.apply_rope(q, pos, cfg_.rope_theta)
+            k = L.apply_rope(k, pos, cfg_.rope_theta)
+            mask = jnp.zeros((1, 1, S, S), jnp.float32)
+            out = L._sdpa(q, k, v, mask).reshape(B, S, -1)
+            x = x + jnp.einsum("bsh,hd->bsd", out, p["attn"]["wo"])
+            h = L.rms_norm(x, p["ln2"], cfg_.rms_eps)
+            return x + L.mlp(p["mlp"], h)
+
+        fn = block
+        if cfg.remat == "full":
+            fn = jax.checkpoint(fn, static_argnums=(0,),
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(cfg, layer_p, carry), None
+
+    x, _ = lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_ln_f"], cfg.rms_eps)
+
+
+def _decoder_block(cfg, p, x, enc_out, *, attn_impl="xla"):
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    h = L.self_attention(p["self_attn"], h, n_heads=cfg.n_heads,
+                         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                         rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+                         attn_impl=attn_impl)
+    x = x + h
+    h = L.rms_norm(x, p["ln_x"], cfg.rms_eps)
+    ck, cv = _cross_kv(p["cross_attn"], enc_out, cfg.n_kv_heads, cfg.head_dim_)
+    h = L.self_attention(p["cross_attn"], h, n_heads=cfg.n_heads,
+                         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                         rope_theta=cfg.rope_theta, cross_kv=(ck, cv))
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    return x + L.mlp(p["mlp"], h)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, extra=None,
+            attn_impl: str = "xla"):
+    """tokens: (B,S) decoder tokens; extra["frames"]: (B,F,D) stub."""
+    frames = extra["frames"]
+    enc_out = encode(cfg, params, frames, attn_impl=attn_impl)
+    x = L.embed(params["embedding"], tokens)
+
+    from functools import partial
+    apply = partial(_decoder_block, attn_impl=attn_impl)
+
+    def body(carry, layer_p):
+        fn = apply
+        if cfg.remat == "full":
+            fn = jax.checkpoint(fn, static_argnums=(0,),
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(cfg, layer_p, carry, enc_out), None
+
+    x, _ = lax.scan(body, x, params["decoder"])
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    return L.unembed(params["lm_head"], x)
+
+
+class EncDecCache(NamedTuple):
+    self_kv: L.KVEntry      # (L, B, S_max, KV, hd)
+    cross_kv: L.KVEntry     # (L, B, F, KV, hd) — fixed after prefill
+    pos: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    if cfg.sliding_window > 0:       # ring buffer (layers.decode_attention)
+        s_max = min(s_max, cfg.sliding_window)
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim_)
+    xshape = (cfg.n_layers, batch, cfg.n_audio_frames, cfg.n_kv_heads,
+              cfg.head_dim_)
+    return EncDecCache(
+        self_kv=L.KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+        cross_kv=L.KVEntry(jnp.zeros(xshape, dtype), jnp.zeros(xshape, dtype)),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache: EncDecCache, *,
+            extra=None, attn_impl: str = "xla"):
+    frames = extra["frames"]
+    enc_out = encode(cfg, params, frames, attn_impl=attn_impl)
+    x = L.embed(params["embedding"], tokens)
+
+    def body(x, scanned):
+        layer_p, kv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.prefill_attention(
+            layer_p["self_attn"], h, kv_l, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+            attn_impl=attn_impl)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln_x"], cfg.rms_eps)
+        ck, cv = _cross_kv(layer_p["cross_attn"], enc_out, cfg.n_kv_heads,
+                           cfg.head_dim_)
+        h = L.self_attention(layer_p["cross_attn"], h, n_heads=cfg.n_heads,
+                             n_kv_heads=cfg.n_kv_heads,
+                             head_dim=cfg.head_dim_,
+                             rope_theta=cfg.rope_theta, cross_kv=(ck, cv))
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        x = x + L.mlp(layer_p["mlp"], h)
+        return x, (new_kv, L.KVEntry(ck.astype(cache.cross_kv.k.dtype),
+                                     cv.astype(cache.cross_kv.v.dtype)))
+
+    x, (new_self, new_cross) = lax.scan(
+        body, x, (params["decoder"], cache.self_kv))
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.rms_eps)
+    logits = L.unembed(params["lm_head"], x)[:, 0]
+    B = tokens.shape[0]
+    return logits, EncDecCache(self_kv=new_self, cross_kv=new_cross,
+                               pos=jnp.full((B,), tokens.shape[1],
+                                            jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, token, cache: EncDecCache, *,
+                extra=None, attn_impl: str = "xla", advance=None):
+    del extra
+    x = L.embed(params["embedding"], token[:, None])
+    pos = cache.pos
+    B = token.shape[0]
+    adv = jnp.ones((B,), bool) if advance is None else advance
+
+    def body(x, scanned):
+        layer_p, kv_l, xkv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.decode_attention(
+            layer_p["self_attn"], h, kv_l, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+            attn_impl=attn_impl, advance=adv)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln_x"], cfg.rms_eps)
+        h = L.self_attention(layer_p["cross_attn"], h, n_heads=cfg.n_heads,
+                             n_kv_heads=cfg.n_kv_heads,
+                             head_dim=cfg.head_dim_,
+                             rope_theta=cfg.rope_theta,
+                             cross_kv=(xkv_l.k.astype(x.dtype),
+                                       xkv_l.v.astype(x.dtype)))
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        x = x + L.mlp(layer_p["mlp"], h)
+        return x, new_kv
+
+    x, new_self = lax.scan(body, x,
+                           (params["decoder"], cache.self_kv, cache.cross_kv))
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    logits = L.unembed(params["lm_head"], x)[:, 0]
+    return logits, EncDecCache(self_kv=new_self, cross_kv=cache.cross_kv,
+                               pos=pos + adv.astype(jnp.int32))

@@ -1,0 +1,219 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block applied
+after every ``cfg.attn_every`` SSM layers. [arXiv:2411.15242]
+
+The attention block's weights are shared across all application sites (the
+Zamba trick), but each site keeps its own KV cache during decode. Decode cost
+is O(sites * context) attention reads + O(1) SSM state updates — sub-quadratic
+overall, so the long_500k shape runs natively (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.param import pdef
+
+
+def _group_bounds(cfg: ModelConfig):
+    """[(l0, l1, has_attn_after)] covering all n_layers."""
+    k = cfg.attn_every
+    bounds = []
+    l0 = 0
+    while l0 < cfg.n_layers:
+        l1 = min(l0 + k, cfg.n_layers)
+        bounds.append((l0, l1, l1 - l0 == k))
+        l0 = l1
+    return bounds
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return sum(1 for _, _, a in _group_bounds(cfg) if a)
+
+
+def shared_attn_defs(cfg: ModelConfig):
+    return {
+        "ln1": pdef((cfg.d_model,), ("embed",), "ones"),
+        "attn": L.attention_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim_, qkv_bias=cfg.qkv_bias),
+        "ln2": pdef((cfg.d_model,), ("embed",), "ones"),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def model_defs(cfg: ModelConfig):
+    defs = {
+        "embedding": L.embedding_defs(cfg.vocab_size, cfg.d_model),
+        "layers": M.block_defs(cfg),
+        "shared_attn": shared_attn_defs(cfg),
+        "ln_f": pdef((cfg.d_model,), ("embed",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = pdef((cfg.d_model, cfg.vocab_size),
+                               ("embed", "vocab"), "scaled")
+    return defs
+
+
+def _slice_layers(tree, l0, l1):
+    return jax.tree.map(lambda a: a[l0:l1], tree)
+
+
+def _shared_attn_apply(cfg, p, x, *, window=0, attn_impl="xla"):
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    h = L.self_attention(p["attn"], h, n_heads=cfg.n_heads,
+                         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                         rope_theta=cfg.rope_theta, window=window,
+                         attn_impl=attn_impl)
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    return x + L.mlp(p["mlp"], h)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, extra=None,
+            attn_impl: str = "xla"):
+    del extra
+    x = L.embed(params["embedding"], tokens)
+
+    def mamba_body(carry, layer_p):
+        fn = M._block_apply
+        if cfg.remat == "full":
+            fn = jax.checkpoint(fn, static_argnums=(0,),
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(cfg, layer_p, carry), None
+
+    for l0, l1, has_attn in _group_bounds(cfg):
+        x, _ = lax.scan(mamba_body, x, _slice_layers(params["layers"], l0, l1))
+        if has_attn:
+            x = _shared_attn_apply(cfg, params["shared_attn"], x,
+                                   window=cfg.sliding_window,
+                                   attn_impl=attn_impl)
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    return L.unembed(head, x)
+
+
+class HybridCache(NamedTuple):
+    mamba: M.MambaCache
+    attn_kv: L.KVEntry          # stacked over sites: (n_sites,B,S_max,KV,hd)
+    pos: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    sites = n_attn_sites(cfg)
+    shape = (sites, batch, s_max, cfg.n_kv_heads, cfg.head_dim_)
+    return HybridCache(
+        mamba=M.init_cache(cfg, batch, s_max, dtype),
+        attn_kv=L.KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache: HybridCache, *,
+            extra=None, attn_impl: str = "xla"):
+    del extra
+    x = L.embed(params["embedding"], tokens)
+    S = tokens.shape[1]
+    new_convs, new_ssms, new_k, new_v = [], [], [], []
+    site = 0
+
+    def mamba_body(x, scanned):
+        layer_p, ssm0 = scanned
+        h = L.rms_norm(x, layer_p["ln"], cfg.rms_eps)
+        out, final = M.mamba_mixer(cfg, layer_p["mixer"], h, initial_state=ssm0)
+        tail = M._conv_tail(cfg, layer_p["mixer"], h)
+        return x + out, (tail.astype(cache.mamba.conv.dtype), final)
+
+    for l0, l1, has_attn in _group_bounds(cfg):
+        sub = _slice_layers(params["layers"], l0, l1)
+        ssm0 = cache.mamba.ssm[l0:l1]
+        x, (tails, finals) = lax.scan(mamba_body, x, (sub, ssm0))
+        new_convs.append(tails)
+        new_ssms.append(finals)
+        if has_attn:
+            p = params["shared_attn"]
+            h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+            h, kv = L.prefill_attention(
+                p["attn"], h, L.KVEntry(cache.attn_kv.k[site],
+                                        cache.attn_kv.v[site]),
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                window=cfg.sliding_window, attn_impl=attn_impl)
+            x = x + h
+            h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+            x = x + L.mlp(p["mlp"], h)
+            new_k.append(kv.k)
+            new_v.append(kv.v)
+            site += 1
+
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)[:, 0]
+    B = tokens.shape[0]
+    posv = jnp.full((B,), S, jnp.int32)
+    new_cache = HybridCache(
+        mamba=M.MambaCache(conv=jnp.concatenate(new_convs, 0),
+                           ssm=jnp.concatenate(new_ssms, 0), pos=posv),
+        attn_kv=L.KVEntry(jnp.stack(new_k), jnp.stack(new_v)),
+        pos=posv,
+    )
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache: HybridCache, *,
+                extra=None, attn_impl: str = "xla", advance=None):
+    del extra
+    x = L.embed(params["embedding"], token[:, None])
+    pos = cache.pos
+    B = token.shape[0]
+    adv = jnp.ones((B,), bool) if advance is None else advance
+    new_convs, new_ssms, new_k, new_v = [], [], [], []
+    site = 0
+
+    def mamba_body(x, scanned):
+        layer_p, conv_l, ssm_l = scanned
+        h = L.rms_norm(x, layer_p["ln"], cfg.rms_eps)
+        out, nc, ns = M.mamba_mixer_decode(cfg, layer_p["mixer"], h,
+                                           conv_l, ssm_l)
+        nc = jnp.where(adv[:, None, None], nc, conv_l)
+        ns = jnp.where(adv[:, None, None, None], ns, ssm_l)
+        return x + out, (nc, ns)
+
+    for l0, l1, has_attn in _group_bounds(cfg):
+        sub = _slice_layers(params["layers"], l0, l1)
+        x, (ncs, nss) = lax.scan(
+            mamba_body, x, (sub, cache.mamba.conv[l0:l1],
+                            cache.mamba.ssm[l0:l1]))
+        new_convs.append(ncs)
+        new_ssms.append(nss)
+        if has_attn:
+            p = params["shared_attn"]
+            h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+            h, kv = L.decode_attention(
+                p["attn"], h, L.KVEntry(cache.attn_kv.k[site],
+                                        cache.attn_kv.v[site]), pos,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+                window=cfg.sliding_window, attn_impl=attn_impl, advance=adv)
+            x = x + h
+            h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+            x = x + L.mlp(p["mlp"], h)
+            new_k.append(kv.k)
+            new_v.append(kv.v)
+            site += 1
+
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)[:, 0]
+    new_pos = pos + adv.astype(jnp.int32)
+    new_cache = HybridCache(
+        mamba=M.MambaCache(conv=jnp.concatenate(new_convs, 0),
+                           ssm=jnp.concatenate(new_ssms, 0), pos=new_pos),
+        attn_kv=L.KVEntry(jnp.stack(new_k), jnp.stack(new_v)),
+        pos=new_pos,
+    )
+    return logits, new_cache

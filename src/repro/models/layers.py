@@ -1,0 +1,373 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+All functions are pure; parameters are plain dict pytrees declared with
+``ParamDef`` (see param.py). Attention supports:
+  - full causal (train / prefill)
+  - KV-cache decode (one new token against a seq_len cache)
+  - sliding-window decode (windowed dynamic-slice over the cache) — the
+    sub-quadratic dense-arch variant used for the long_500k shape
+  - GQA with non-divisible head counts (kv heads broadcast via reshape)
+
+Softmax and normalization accumulate in float32; matmuls run in the model
+dtype (bfloat16 by default) to match the MXU-native numerics of the TPU
+target.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.param import pdef
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (MaxText-style logical annotations)
+# ---------------------------------------------------------------------------
+
+def _ambient_mesh():
+    """The mesh installed by ``with mesh:`` around jit/lower, or None.
+    Model code runs unchanged on a single device (no mesh -> no-op)."""
+    try:
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            from jax.interpreters import pxla
+            m = pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def constrain(x, *axes):
+    """Constrain activation sharding by logical dim names.
+
+    axes: one entry per dim — 'batch' (→ ('pod','data')), 'model', or None.
+    Without this, XLA's sharding propagation gives up inside scanned layer
+    bodies and replicates the batch (empirically: 256-row attention scores
+    per device on the 16x16 mesh). Divisibility fallback replicates."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    spec = []
+    for dim, a in zip(x.shape, axes):
+        if a == "batch":
+            ba = tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+            size = 1
+            for n in ba:
+                size *= mesh.shape[n]
+            if ba and size > 1 and dim % size == 0:
+                spec.append(ba if len(ba) > 1 else ba[0])
+            else:
+                spec.append(None)
+        elif (a == "model" and "model" in mesh.axis_names
+                and dim % mesh.shape["model"] == 0 and dim > 0):
+            spec.append("model")
+        else:
+            spec.append(None)
+    return lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm_def(d_model: int):
+    return pdef((d_model,), ("embed",), init="ones")
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    # every block in every family enters through rms_norm, so this single
+    # constraint re-anchors batch sharding inside scanned layer bodies
+    # (see ``constrain`` above).
+    x = constrain(x, *(["batch"] + [None] * (x.ndim - 1)))
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                      # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                   # (hd//2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd//2)
+    cos = jnp.cos(angles)[..., None, :]                   # (...,S,1,hd//2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _maybe_seq_parallel(q, n_heads):
+    """Sequence-parallel attention for TP-unshardable head counts (§Perf-B).
+
+    When n_heads doesn't divide the model axis (qwen2: 14 heads on a
+    16-way axis; whisper: 20), the head dim replicates and XLA computes the
+    FULL (S, S) attention on every model-axis rank. Sharding the *query
+    sequence* over the model axis instead splits the quadratic score
+    tensor S/tp ways; K/V stay whole (they are KV-head-small), and the
+    output reshards to batch-only at the next rms_norm constraint."""
+    mesh = _ambient_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return q
+    tp = mesh.shape["model"]
+    if tp <= 1 or n_heads % tp == 0:
+        return q                      # heads shard fine; keep TP semantics
+    # only worth it when the quadratic term dominates; at short S the
+    # backward-pass reshards cost more than the score split saves
+    # (measured: granite train_4k coll 18.4s -> 70s with S=4096 — refuted)
+    if q.shape[1] < 16384 or q.shape[1] % tp != 0:
+        return q
+    return constrain(q, "batch", "model", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_defs(d_model, n_heads, n_kv_heads, head_dim, *, qkv_bias=False,
+                   layers=None):
+    """ParamDef tree for one attention block (optionally layer-stacked)."""
+    L = (layers,) if layers else ()
+    ax = ("layers",) if layers else ()
+    defs = {
+        "wq": pdef(L + (d_model, n_heads * head_dim), ax + ("embed", "heads"),
+                   init="scaled"),
+        "wk": pdef(L + (d_model, n_kv_heads * head_dim),
+                   ax + ("embed", "kv_heads"), init="scaled"),
+        "wv": pdef(L + (d_model, n_kv_heads * head_dim),
+                   ax + ("embed", "kv_heads"), init="scaled"),
+        "wo": pdef(L + (n_heads * head_dim, d_model), ax + ("heads", "embed"),
+                   init="scaled"),
+    }
+    if qkv_bias:
+        defs["bq"] = pdef(L + (n_heads * head_dim,), ax + ("heads",), "zeros")
+        defs["bk"] = pdef(L + (n_kv_heads * head_dim,), ax + ("kv_heads",),
+                          "zeros")
+        defs["bv"] = pdef(L + (n_kv_heads * head_dim,), ax + ("kv_heads",),
+                          "zeros")
+    return defs
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv_heads, head_dim)
+    v = v.reshape(B, S, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,Sq,H,hd)  k,v: (B,Sk,KV,hd)  mask: (B|1,1,Sq,Sk) additive."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    q = q.reshape(B, Sq, KV, groups, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = scores + mask[:, :, None, :, :]              # (B,KV,G,Sq,Sk)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def causal_mask(Sq, Sk, *, q_offset=0, window: int = 0):
+    """Additive mask (1,1,Sq,Sk). q position i attends to k<=i+q_offset,
+    and (if window>0) k > i+q_offset-window."""
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= kpos > (qpos - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, None]
+
+
+def self_attention(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+                   positions=None, window: int = 0, cross_kv=None,
+                   attn_impl: str = "xla"):
+    """Full-sequence self-attention (train / prefill).
+
+    cross_kv: optional (k, v) tuple — if given, attend to those instead of
+    self-derived k/v (encoder-decoder cross attention; no causal mask).
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    if cross_kv is not None:
+        # (§Perf-B note: seq-parallelizing q here was tried and REFUTED —
+        # it left whisper's memory term unchanged and tripled the train_4k
+        # collective term from resharding; see EXPERIMENTS.md §Perf.)
+        k, v = cross_kv
+        mask = jnp.zeros((1, 1, S, k.shape[1]), jnp.float32)
+    else:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+        q = _maybe_seq_parallel(q, n_heads)
+        mask = causal_mask(S, S, window=window)
+    if attn_impl == "pallas" and cross_kv is None:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                     interpret=True)
+    else:
+        out = _sdpa(q, k, v, mask)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+class KVEntry(NamedTuple):
+    k: jax.Array      # (B, S_max, KV, hd)
+    v: jax.Array
+    # position of next write is tracked by the caller (shared across layers)
+
+
+def init_kv(batch, s_max, n_kv_heads, head_dim, dtype=jnp.bfloat16):
+    shape = (batch, s_max, n_kv_heads, head_dim)
+    return KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def prefill_attention(p, x, kv: KVEntry, *, n_heads, n_kv_heads, head_dim,
+                      rope_theta, window: int = 0, attn_impl: str = "xla"):
+    """Causal attention over the prompt; writes k/v into cache[0:S)."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    q = _maybe_seq_parallel(q, n_heads)
+    new_kv = KVEntry(
+        lax.dynamic_update_slice(kv.k, k.astype(kv.k.dtype), (0, 0, 0, 0)),
+        lax.dynamic_update_slice(kv.v, v.astype(kv.v.dtype), (0, 0, 0, 0)),
+    )
+    mask = causal_mask(S, S, window=window)
+    if attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                     interpret=True)
+    else:
+        out = _sdpa(q, k, v, mask)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_kv
+
+
+def decode_attention(p, x, kv: KVEntry, pos, *, n_heads, n_kv_heads,
+                     head_dim, rope_theta, window: int = 0,
+                     attn_impl: str = "xla", advance=None):
+    """One-token decode: x (B,1,D).
+
+    pos: (B,) int32 per-row ABSOLUTE token positions (ragged batches: rows
+    of a multi-turn rollout act at different times), or a scalar broadcast.
+    advance: optional (B,) bool — rows with False neither write the cache
+    nor should their output be consumed (the rollout engine feeds PAD to
+    rows waiting on the rest of the batch).
+
+    Ring-buffer semantics (§Perf-A): slot for token t is ``t % s_max``, so
+    a sliding-window cache is allocated at s_max == window and old entries
+    are overwritten in place — per-token cost and footprint are O(window)
+    instead of O(total context). When s_max covers the full context the
+    modulo is the identity and this is a plain linear cache. Slot i holds
+    absolute position ``kpos_i = pos - ((pos - i) mod s_max)``; validity
+    masks negative / future / out-of-window entries. (The previous
+    implementation kept the FULL-length cache and dynamic-sliced a window
+    around pos; under a seq-sharded cache XLA lowered that to an
+    all-gather of the whole cache per token — 12 GiB/token for qwen2's
+    long_500k — see EXPERIMENTS.md §Perf.)
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    s_max = kv.k.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    if advance is None:
+        advance = jnp.ones((B,), bool)
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k_new = apply_rope(k_new, positions, rope_theta)
+    rows = jnp.arange(B)
+    slot = pos % s_max                                    # ring write slot
+    old_k = kv.k[rows, slot]                              # (B,KV,hd)
+    old_v = kv.v[rows, slot]
+    wk = jnp.where(advance[:, None, None], k_new[:, 0].astype(kv.k.dtype),
+                   old_k)
+    wv = jnp.where(advance[:, None, None], v_new[:, 0].astype(kv.v.dtype),
+                   old_v)
+    kv = KVEntry(kv.k.at[rows, slot].set(wk), kv.v.at[rows, slot].set(wv))
+    k, v = kv.k, kv.v
+    # absolute position held by each ring slot (identity when s_max > pos)
+    idx = jnp.arange(s_max)[None, :]
+    kpos = pos[:, None] - jnp.mod(pos[:, None] - idx, s_max)      # (B,Sk)
+    valid = (kpos >= 0) & (kpos <= pos[:, None])
+    if window > 0:
+        valid &= kpos > (pos[:, None] - window)
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None, None, :]
+    if attn_impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(q[:, 0], k, v, valid, interpret=True)
+        out = out[:, None]
+    else:
+        out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    out = out.reshape(B, 1, n_heads * head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), kv
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d_model, d_ff, *, layers=None):
+    L = (layers,) if layers else ()
+    ax = ("layers",) if layers else ()
+    return {
+        "w_gate": pdef(L + (d_model, d_ff), ax + ("embed", "mlp"), "scaled"),
+        "w_up": pdef(L + (d_model, d_ff), ax + ("embed", "mlp"), "scaled"),
+        "w_down": pdef(L + (d_ff, d_model), ax + ("mlp", "embed"), "scaled"),
+    }
+
+
+def mlp(p, x):
+    gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("bsf,fd->bsd", act, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embedding_defs(vocab, d_model):
+    return pdef((vocab, d_model), ("vocab", "embed"), init="normal")
+
+
+def embed(emb, tokens):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def unembed(emb_or_head, x):
+    """x: (B,S,D) -> logits (B,S,V). Accepts (V,D) table (tied) or (D,V)."""
+    if emb_or_head.shape[0] < emb_or_head.shape[1]:
+        return jnp.einsum("bsd,dv->bsv", x, emb_or_head)
+    return jnp.einsum("bsd,vd->bsv", x, emb_or_head)

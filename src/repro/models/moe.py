@@ -1,0 +1,339 @@
+"""Mixture-of-Experts decoder (granite-moe / grok-1 family).
+
+Expert FFNs use GShard-style capacity-based dispatch expressed as einsums so
+the whole layer shards under pjit:
+
+    probs    = softmax(x @ router)                  (G,T,E)
+    dispatch = one_hot(top-k, capacity slots)       (G,T,E,C)
+    h        = einsum(dispatch, x) -> expert FFN -> combine
+
+Expert weight tensors carry logical axes ("experts", "embed", "expert_mlp");
+the mesh rules shard the per-expert hidden dim over the model axis (always
+divisible for the assigned configs) and shard experts over the model axis
+only when divisible — see DESIGN.md §5/§9.
+
+The router aux (load-balance) loss follows Shazeer/GShard:
+    aux = E * sum_e( frac_tokens_e * mean_prob_e )
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import pdef
+
+
+def moe_mlp_defs(cfg: ModelConfig, *, layers=None):
+    m = cfg.moe
+    n = (layers,) if layers else ()
+    ax = ("layers",) if layers else ()
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    return {
+        "router": pdef(n + (d, e), ax + ("embed", "experts"), "scaled"),
+        "w_gate": pdef(n + (e, d, f), ax + ("experts", "embed", "expert_mlp"),
+                       "scaled"),
+        "w_up": pdef(n + (e, d, f), ax + ("experts", "embed", "expert_mlp"),
+                     "scaled"),
+        "w_down": pdef(n + (e, f, d), ax + ("experts", "expert_mlp", "embed"),
+                       "scaled"),
+    }
+
+
+def _capacity(tokens_per_group: int, n_experts: int, top_k: int,
+              factor: float) -> int:
+    c = int(math.ceil(tokens_per_group * top_k / n_experts * factor))
+    return max(c, top_k)
+
+
+MOE_GROUP_TOKENS = 512     # GShard group size: capacity tensors are
+                           # O(T^2 * E) per group, so T must stay bounded
+
+
+def moe_mlp(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar).
+
+    Tokens are re-grouped into ``MOE_GROUP_TOKENS``-sized dispatch groups
+    first: the GShard combine/dispatch tensors are (G, T, E, C) with
+    C ~ T*k/E — quadratic in T — so full-sequence groups at 32K context
+    would materialize TB-scale one-hots."""
+    B_, S_, D_ = x.shape
+    Tg = MOE_GROUP_TOKENS if (B_ * S_) % MOE_GROUP_TOKENS == 0 else S_
+    x = x.reshape(B_ * S_ // Tg, Tg, D_)
+    out, aux = _moe_mlp_grouped(cfg, p, x)
+    return out.reshape(B_, S_, D_), aux
+
+
+def _route(cfg: ModelConfig, p, x):
+    """Shared router: top-k gates + capacity slots + aux loss.
+
+    Returns (gate_vals (G,T,K) f32, gate_idx (G,T,K) i32, slot (G,T,K) i32,
+    in_cap (G,T,K) bool, C, aux)."""
+    m = cfg.moe
+    G, T, D = x.shape
+    E, K = m.n_experts, m.top_k
+    C = _capacity(T, E, K, m.capacity_factor)
+
+    router_logits = jnp.einsum("gtd,de->gte", x, p["router"])
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+
+    gate_vals, gate_idx = lax.top_k(probs, K)               # (G,T,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balance aux loss (computed on full probs + hard assignment).
+    assign1 = jax.nn.one_hot(gate_idx[..., 0], E)            # top-1 choice
+    frac_tokens = jnp.mean(assign1, axis=1)                  # (G,E)
+    mean_probs = jnp.mean(probs, axis=1)                     # (G,E)
+    aux = E * jnp.mean(jnp.sum(frac_tokens * mean_probs, axis=-1))
+
+    # Capacity slots: for the k-th choice of token t in expert e, its slot is
+    # the running count of earlier tokens that chose e (across all k ranks).
+    sel = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)       # (G,T,K,E)
+    flat = sel.reshape(G, T * K, E)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat               # (G,T*K,E)
+    pos_in_e = pos_in_e.reshape(G, T, K, E)
+    slot = jnp.take_along_axis(pos_in_e, gate_idx[..., None],
+                               axis=3)[..., 0]               # (G,T,K)
+    in_cap = slot < C
+    return gate_vals, gate_idx, slot, in_cap, C, aux
+
+
+def _moe_mlp_grouped(cfg: ModelConfig, p, x):
+    if cfg.moe_dispatch == "scatter":
+        return _moe_mlp_grouped_scatter(cfg, p, x)
+    return _moe_mlp_grouped_onehot(cfg, p, x)
+
+
+def _moe_mlp_grouped_scatter(cfg: ModelConfig, p, x):
+    """x: (G, T, D) grouped tokens -> (out (G,T,D), aux_loss scalar).
+
+    Scatter/gather dispatch (§Perf-C): tokens are scattered into their
+    (expert, capacity-slot) buffers with ``.at[].add`` and gathered back by
+    flat slot index. The classic GShard one-hot formulation materializes a
+    (G,T,K,E,C) slot one-hot plus (G,T,E,C) combine/dispatch tensors and
+    pays 2·G·T·E·C·D dispatch FLOPs — ~1.25x the expert matmuls themselves
+    at granite's E=40,C=T·k/E. This path has the same semantics (verified
+    against ``_moe_mlp_grouped_onehot`` in tests) at ~zero dispatch FLOPs.
+
+    MEASURED OUTCOME (§Perf-C its. 1-2): 4x fewer HLO FLOPs but XLA's SPMD
+    partitioner handles scatter poorly ("Involuntary full
+    rematerialization... will be fixed by Shardy") — collective term 18.4s
+    -> 44.7s on the 16x16 mesh. Default is therefore ``onehot``; select
+    ``moe_dispatch="scatter"`` on Shardy-partitioned backends.
+    """
+    m = cfg.moe
+    G, T, D = x.shape
+    E, K = m.n_experts, m.top_k
+    gate_vals, gate_idx, slot, in_cap, C, aux = _route(cfg, p, x)
+
+    # flat buffer index e*C + s; dropped tokens write to a clamped slot with
+    # zero contribution (masked below on both scatter and gather sides)
+    f_idx = gate_idx * C + jnp.minimum(slot, C - 1)          # (G,T,K)
+    contrib = (x[:, :, None, :]
+               * in_cap[..., None].astype(x.dtype))          # (G,T,K,D)
+    gi = jnp.arange(G)[:, None, None]
+    # pin group dim to the batch axes so SPMD keeps the scatter local to
+    # each data shard (without this XLA all-reduces the updates over the
+    # model axis — 3.8 GiB/layer observed)
+    contrib = L.constrain(contrib, "batch", None, None, None)
+    xe_flat = jnp.zeros((G, E * C, D), x.dtype)
+    xe_flat = xe_flat.at[gi, f_idx].add(contrib)             # scatter-set
+    xe_flat = L.constrain(xe_flat, "batch", None, None)
+    xe = xe_flat.reshape(G, E, C, D)
+
+    gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    ye = jnp.einsum("gecf,efd->gecd", act, p["w_down"])      # (G,E,C,D)
+
+    y_tok = ye.reshape(G, E * C, D)[gi, f_idx]               # (G,T,K,D)
+    w = (gate_vals * in_cap).astype(x.dtype)                 # (G,T,K)
+    out = jnp.einsum("gtk,gtkd->gtd", w, y_tok)
+    return out, aux.astype(jnp.float32)
+
+
+def _moe_mlp_grouped_onehot(cfg: ModelConfig, p, x):
+    """GShard einsum formulation with a fused flat-slot one-hot — the
+    measured-best path under XLA SPMD (§Perf-C) and the numeric oracle."""
+    m = cfg.moe
+    G, T, D = x.shape
+    E, K = m.n_experts, m.top_k
+    gate_vals, gate_idx, slot, in_cap, C, aux = _route(cfg, p, x)
+
+    # single fused (E*C) one-hot of the flat slot index — one big one-hot
+    # instead of the classic sel x slot_oh pair einsum (halves the traffic
+    # through the (G,T,K,E,C)-scale tensors; §Perf-C iteration 3)
+    f_idx = gate_idx * C + jnp.minimum(slot, C - 1)          # (G,T,K)
+    z_oh = (jax.nn.one_hot(f_idx, E * C, dtype=x.dtype)
+            * in_cap[..., None].astype(x.dtype))             # (G,T,K,E*C)
+    combine = jnp.einsum("gtk,gtkz->gtz", gate_vals.astype(x.dtype),
+                         z_oh).reshape(G, T, E, C)
+    dispatch = (combine > 0).astype(x.dtype)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, x)           # (G,E,C,D)
+    gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    ye = jnp.einsum("gecf,efd->gecd", act, p["w_down"])      # (G,E,C,D)
+    out = jnp.einsum("gtec,gecd->gtd", combine, ye)
+    return out, aux.astype(jnp.float32)
+
+
+def moe_mlp_dense(cfg: ModelConfig, p, x):
+    """Exact (drop-free) top-k combine: every expert runs on every token and
+    the one-hot gate selects. Used at decode where token counts are tiny —
+    costs E/top_k redundant FLOPs but avoids capacity-dropping a live
+    generation token. (Perf note: a gather-based sparse decode path is a
+    §Perf candidate; see EXPERIMENTS.md.)
+
+    x: (B, T, D) -> (out, aux).
+    """
+    m = cfg.moe
+    router_logits = jnp.einsum("btd,de->bte", x, p["router"])
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    combine = jnp.einsum("btk,btke->bte", gate_vals,
+                         jax.nn.one_hot(gate_idx, m.n_experts))  # (B,T,E)
+    gate = jnp.einsum("btd,edf->betf", x, p["w_gate"])
+    up = jnp.einsum("btd,edf->betf", x, p["w_up"])
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    ye = jnp.einsum("betf,efd->betd", act, p["w_down"])
+    out = jnp.einsum("bte,betd->btd", combine.astype(x.dtype), ye)
+    return out, jnp.zeros((), jnp.float32)
+
+
+def block_defs(cfg: ModelConfig):
+    n = cfg.n_layers
+    return {
+        "ln1": pdef((n, cfg.d_model), ("layers", "embed"), "ones"),
+        "attn": L.attention_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim_, qkv_bias=cfg.qkv_bias,
+                                 layers=n),
+        "ln2": pdef((n, cfg.d_model), ("layers", "embed"), "ones"),
+        "moe": moe_mlp_defs(cfg, layers=n),
+    }
+
+
+def model_defs(cfg: ModelConfig):
+    defs = {
+        "embedding": L.embedding_defs(cfg.vocab_size, cfg.d_model),
+        "layers": block_defs(cfg),
+        "ln_f": pdef((cfg.d_model,), ("embed",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = pdef((cfg.d_model, cfg.vocab_size),
+                               ("embed", "vocab"), "scaled")
+    return defs
+
+
+def _block_apply(cfg: ModelConfig, p, x, *, window, attn_impl="xla"):
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    h = L.self_attention(p["attn"], h, n_heads=cfg.n_heads,
+                         n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                         rope_theta=cfg.rope_theta, window=window,
+                         attn_impl=attn_impl)
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    out, aux = moe_mlp(cfg, p["moe"], h)
+    return x + out, aux
+
+
+def forward(cfg: ModelConfig, params, tokens, *, extra=None,
+            attn_impl: str = "xla"):
+    del extra
+    x = L.embed(params["embedding"], tokens)
+
+    from functools import partial
+    apply = partial(_block_apply, window=cfg.sliding_window,
+                    attn_impl=attn_impl)
+
+    def body(carry, layer_p):
+        fn = apply
+        if cfg.remat == "full":
+            fn = jax.checkpoint(fn, static_argnums=(0,),
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        x, aux = fn(cfg, layer_p, carry)
+        return x, aux
+
+    x, auxes = lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)
+    return logits, {"aux_loss": jnp.mean(auxes) * cfg.moe.router_aux_weight}
+
+
+class MoECache(NamedTuple):
+    kv: L.KVEntry
+    pos: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    if cfg.sliding_window > 0:       # ring buffer (layers.decode_attention)
+        s_max = min(s_max, cfg.sliding_window)
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim_)
+    return MoECache(
+        kv=L.KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache: MoECache, *, extra=None,
+            attn_impl: str = "xla"):
+    del extra
+    x = L.embed(params["embedding"], tokens)
+
+    def body(x, scanned):
+        layer_p, kv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.prefill_attention(
+            layer_p["attn"], h, kv_l, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+            attn_impl=attn_impl)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        out, _ = moe_mlp(cfg, layer_p["moe"], h)
+        return x + out, new_kv
+
+    x, new_kv = lax.scan(body, x, (params["layers"], cache.kv))
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)[:, 0]
+    B = tokens.shape[0]
+    return logits, MoECache(kv=new_kv,
+                            pos=jnp.full((B,), tokens.shape[1], jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, token, cache: MoECache, *,
+                extra=None, attn_impl: str = "xla", advance=None):
+    del extra
+    x = L.embed(params["embedding"], token[:, None])     # (B,1,D)
+    pos = cache.pos
+    B = token.shape[0]
+    adv = jnp.ones((B,), bool) if advance is None else advance
+
+    def body(x, scanned):
+        layer_p, kv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.decode_attention(
+            layer_p["attn"], h, kv_l, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+            attn_impl=attn_impl, advance=adv)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        # Decode: exact dense combine (no capacity drops on live tokens).
+        out, _ = moe_mlp_dense(cfg, layer_p["moe"], h)
+        return x + out, new_kv
+
+    x, new_kv = lax.scan(body, x, (params["layers"], cache.kv))
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)[:, 0]
+    return logits, MoECache(kv=new_kv, pos=pos + adv.astype(jnp.int32))

@@ -1,0 +1,68 @@
+"""Parameter definition machinery.
+
+Models declare parameters as ``ParamDef(shape, logical_axes, init)`` trees.
+``init_params`` materializes the tree with real arrays; ``logical_specs``
+extracts the logical-axis tree, which ``launch/mesh.py`` maps onto the
+physical mesh via rules (with replication fallback for non-divisible dims —
+see DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]     # logical axis names, len == ndim
+    init: str = "normal"                # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def pdef(shape, axes, init="normal", scale=0.02) -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), init, scale)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(rng, defs, dtype=jnp.bfloat16):
+    """Materialize a ParamDef tree into an array tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=_is_def)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for r, d in zip(rngs, leaves):
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dtype)
+        elif d.init == "scaled":
+            # variance-scaled by fan_in (last-but-one dim heuristic)
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(r, d.shape, jnp.float32) * std).astype(dtype)
+        else:
+            arr = (jax.random.normal(r, d.shape, jnp.float32) * d.scale).astype(dtype)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def logical_specs(defs):
+    """Extract the logical-axes tree (same structure as the param tree)."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree matching init_params output (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def
+    )

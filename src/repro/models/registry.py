@@ -1,0 +1,110 @@
+"""Unified Model interface over all architecture families.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    logits, aux = model.forward(params, tokens, extra=batch_extras)
+    cache = model.init_cache(batch, s_max)
+    logits, cache = model.prefill(params, tokens, cache, extra=...)
+    logits, cache = model.decode_step(params, token, cache)
+
+``extra`` carries the stubbed modality inputs (audio frames / image
+embeddings) per the assignment carve-out; ``input_extras`` describes their
+shapes for ``launch.dryrun.input_specs``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, mamba, moe, transformer, vlm
+from repro.models.param import abstract_params, init_params, logical_specs
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    defs: Any
+    _forward: Callable
+    _init_cache: Callable
+    _prefill: Callable
+    _decode_step: Callable
+    has_aux: bool = False
+
+    # -- params ------------------------------------------------------------
+    def init(self, rng, dtype=jnp.bfloat16):
+        return init_params(rng, self.defs, dtype)
+
+    def abstract(self, dtype=jnp.bfloat16):
+        return abstract_params(self.defs, dtype)
+
+    def param_logical_specs(self):
+        return logical_specs(self.defs)
+
+    # -- compute -----------------------------------------------------------
+    def forward(self, params, tokens, *, extra=None, attn_impl="xla"):
+        out = self._forward(self.cfg, params, tokens, extra=extra,
+                            attn_impl=attn_impl)
+        if self.has_aux:
+            return out                       # (logits, aux dict)
+        return out, {}
+
+    def init_cache(self, batch, s_max, dtype=jnp.bfloat16):
+        return self._init_cache(self.cfg, batch, s_max, dtype)
+
+    def prefill(self, params, tokens, cache, *, extra=None, attn_impl="xla"):
+        return self._prefill(self.cfg, params, tokens, cache, extra=extra,
+                             attn_impl=attn_impl)
+
+    def decode_step(self, params, token, cache, *, extra=None,
+                    attn_impl="xla", advance=None):
+        return self._decode_step(self.cfg, params, token, cache, extra=extra,
+                                 attn_impl=attn_impl, advance=advance)
+
+    # -- stubbed modality inputs --------------------------------------------
+    def input_extras(self, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return {"frames": jax.ShapeDtypeStruct(
+                (batch, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)}
+        if cfg.family == "vlm":
+            return {"image_embeds": jax.ShapeDtypeStruct(
+                (batch, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)}
+        return {}
+
+    def make_extras(self, rng, batch: int):
+        """Concrete random stand-ins for the stubbed frontends (tests)."""
+        specs = self.input_extras(batch)
+        out = {}
+        for i, (k, s) in enumerate(sorted(specs.items())):
+            out[k] = jax.random.normal(jax.random.fold_in(rng, i), s.shape,
+                                       jnp.float32).astype(s.dtype) * 0.02
+        return out or None
+
+
+_FAMILIES = {
+    "dense": (transformer.model_defs, transformer.forward,
+              transformer.init_cache, transformer.prefill,
+              transformer.decode_step, False),
+    "moe": (moe.model_defs, moe.forward, moe.init_cache, moe.prefill,
+            moe.decode_step, True),
+    "ssm": (mamba.model_defs, mamba.forward, mamba.init_cache, mamba.prefill,
+            mamba.decode_step, False),
+    "hybrid": (hybrid.model_defs, hybrid.forward, hybrid.init_cache,
+               hybrid.prefill, hybrid.decode_step, False),
+    "audio": (encdec.model_defs, encdec.forward, encdec.init_cache,
+              encdec.prefill, encdec.decode_step, False),
+    "vlm": (vlm.model_defs, vlm.forward, vlm.init_cache, vlm.prefill,
+            vlm.decode_step, False),
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family not in _FAMILIES:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    defs_fn, fwd, ic, pf, ds, has_aux = _FAMILIES[cfg.family]
+    return Model(cfg=cfg, defs=defs_fn(cfg), _forward=fwd, _init_cache=ic,
+                 _prefill=pf, _decode_step=ds, has_aux=has_aux)

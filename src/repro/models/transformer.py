@@ -1,0 +1,158 @@
+"""Dense decoder-only transformer (qwen2 / stablelm / glm4 / llama3 family).
+
+Layer parameters are stacked on a leading "layers" axis and applied with
+``jax.lax.scan`` so that the lowered HLO size is independent of depth —
+required to keep the 40-combo × 512-device dry-run compile tractable
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import pdef
+
+
+def block_defs(cfg: ModelConfig, *, stacked=True):
+    n = cfg.n_layers if stacked else None
+    return {
+        "ln1": pdef(((n,) if n else ()) + (cfg.d_model,),
+                    (("layers",) if n else ()) + ("embed",), "ones"),
+        "attn": L.attention_defs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim_, qkv_bias=cfg.qkv_bias,
+                                 layers=n),
+        "ln2": pdef(((n,) if n else ()) + (cfg.d_model,),
+                    (("layers",) if n else ()) + ("embed",), "ones"),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, layers=n),
+    }
+
+
+def model_defs(cfg: ModelConfig):
+    defs = {
+        "embedding": L.embedding_defs(cfg.vocab_size, cfg.d_model),
+        "layers": block_defs(cfg),
+        "ln_f": pdef((cfg.d_model,), ("embed",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = pdef((cfg.d_model, cfg.vocab_size),
+                               ("embed", "vocab"), "scaled")
+    return defs
+
+
+def _block_apply(cfg: ModelConfig, p, x, *, window, attn_impl="xla"):
+    h = L.rms_norm(x, p["ln1"], cfg.rms_eps)
+    h = L.self_attention(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta, window=window,
+        attn_impl=attn_impl)
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.rms_eps)
+    x = x + L.mlp(p["mlp"], h)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, *, extra=None,
+            attn_impl: str = "xla"):
+    """Full-sequence forward -> logits (B, S, V)."""
+    del extra
+    x = L.embed(params["embedding"], tokens)
+
+    from functools import partial
+    apply = partial(_block_apply, window=cfg.sliding_window,
+                    attn_impl=attn_impl)
+
+    def body(carry, layer_p):
+        fn = apply
+        if cfg.remat == "full":
+            fn = jax.checkpoint(fn, static_argnums=(0,),
+                                policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(cfg, layer_p, carry), None
+
+    x, _ = lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    return L.unembed(head, x)
+
+
+class DecodeCache(NamedTuple):
+    kv: L.KVEntry           # stacked: (n_layers, B, S_max, KV, hd)
+    pos: jax.Array          # (B,) int32 per-row cache fill (ragged batches)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> DecodeCache:
+    # sliding-window archs allocate a ring buffer of the window size:
+    # O(window) footprint regardless of context (layers.decode_attention)
+    if cfg.sliding_window > 0:
+        s_max = min(s_max, cfg.sliding_window)
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim_)
+    return DecodeCache(
+        kv=L.KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache: DecodeCache, *,
+            extra=None, attn_impl: str = "xla"):
+    """Run the prompt through the model, filling the cache. Returns
+    (logits_last, cache)."""
+    del extra
+    x = L.embed(params["embedding"], tokens)
+    S = tokens.shape[1]
+
+    def body(x, scanned):
+        layer_p, kv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.prefill_attention(
+            layer_p["attn"], h, kv_l, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+            attn_impl=attn_impl)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        x = x + L.mlp(layer_p["mlp"], h)
+        return x, new_kv
+
+    x, new_kv = lax.scan(body, x, (params["layers"], cache.kv))
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)[:, 0]
+    B = tokens.shape[0]
+    return logits, DecodeCache(kv=new_kv,
+                               pos=jnp.full((B,), S, jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, token, cache: DecodeCache, *,
+                extra=None, attn_impl: str = "xla", advance=None):
+    """One decode step. token: (B,) int32. Returns (logits (B,V), cache).
+    advance: optional (B,) bool — rows with False are no-ops (ragged
+    multi-turn rollout; see layers.decode_attention)."""
+    del extra
+    x = L.embed(params["embedding"], token[:, None])
+    pos = cache.pos
+    B = token.shape[0]
+    adv = jnp.ones((B,), bool) if advance is None else advance
+
+    def body(x, scanned):
+        layer_p, kv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.decode_attention(
+            layer_p["attn"], h, kv_l, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, window=cfg.sliding_window,
+            attn_impl=attn_impl, advance=adv)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        x = x + L.mlp(layer_p["mlp"], h)
+        return x, new_kv
+
+    x, new_kv = lax.scan(body, x, (params["layers"], cache.kv))
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)[:, 0]
+    return logits, DecodeCache(kv=new_kv, pos=pos + adv.astype(jnp.int32))

@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw, OptState
+from repro.optim.schedule import cosine_schedule, linear_warmup, constant

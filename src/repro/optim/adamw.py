@@ -1,0 +1,81 @@
+"""AdamW optimizer, built from scratch (no optax in this environment).
+
+Interface mirrors optax's (init, update) pair:
+
+    opt = adamw(lr_schedule, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+                max_grad_norm=1.0)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Optimizer moments are float32 regardless of param dtype (bf16-safe), and are
+stored in the same pytree structure as params, so the mesh's param sharding
+rules apply verbatim to optimizer state (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_global_norm
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: any          # first moment  (float32)
+    nu: any          # second moment (float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(learning_rate: Union[float, Callable], *, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+          max_grad_norm: float = 1.0) -> Optimizer:
+    lr_fn = learning_rate if callable(learning_rate) else (
+        lambda _: learning_rate)
+
+    def init(params) -> OptState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(f32, params),
+                        nu=jax.tree.map(f32, params))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        gnorm = tree_global_norm(grads)
+        if max_grad_norm > 0:
+            scale = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale), grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        sf = step.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** sf)
+        nu_hat_scale = 1.0 / (1 - b2 ** sf)
+        lr = lr_fn(step)
+
+        def upd(m, v, p):
+            u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (step -> lr), pure jnp."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return base_lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_schedule(base_lr: float, total_steps: int, *,
+                    warmup_steps: int = 0, final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1)) \
+            if warmup_steps else jnp.asarray(1.0)
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                     0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * warm * cos
+    return fn

@@ -1,0 +1,9 @@
+from repro.rl.experience import ExperienceBatch
+from repro.rl.algo import (
+    reinforce_advantages,
+    group_relative_advantages,
+    distributed_reinforce_advantages,
+    distributed_group_advantages,
+    policy_gradient_loss,
+    token_logprobs,
+)

@@ -1,0 +1,8 @@
+from repro.rl.envs.tictactoe import TicTacToe
+from repro.rl.envs.connect_four import ConnectFour
+
+ENVS = {"tictactoe": TicTacToe, "connect_four": ConnectFour}
+
+
+def make_env(name: str, **kw):
+    return ENVS[name](**kw)

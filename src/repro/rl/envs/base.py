@@ -1,0 +1,36 @@
+"""Vectorized two-player board-game environments, pure jnp.
+
+The agent (LLM policy) always plays piece 1; the built-in opponent (uniform
+random over legal moves) plays piece 2 and moves immediately after the agent
+inside ``step``. All arrays carry a leading batch dimension and the whole
+env is jit/vmap-friendly; finished episodes absorb (further steps are
+no-ops).
+
+Token protocol (shared by both games): each environment exposes a small
+control-token region at the bottom of the model's vocabulary; the rollout
+engine renders observations with ``encode_obs`` and decodes the agent's
+action from the last generated token of the turn (``action = token %
+n_actions``). Rewards: win=+1, draw=0, loss=-1, illegal move=-1 (terminal).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Control-token ids (kept below any game's OBS_BASE)
+TOK_PAD = 0
+TOK_BOS = 1
+TOK_TURN = 2          # "your move" marker
+TOK_WIN = 3
+TOK_LOSS = 4
+TOK_DRAW = 5
+TOK_ILLEGAL = 6
+TOK_OBS_BASE = 8      # cell encodings start here: empty/agent/opponent
+
+
+class StepResult(NamedTuple):
+    reward: jax.Array        # (B,) float32 — nonzero only on terminal step
+    done: jax.Array          # (B,) bool
+    obs_tokens: jax.Array    # (B, obs_len) int32 — next observation

@@ -1,0 +1,116 @@
+"""Vectorized Connect-Four (the paper's §3.1 evaluation environment)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import (StepResult, TOK_BOS, TOK_DRAW, TOK_ILLEGAL,
+                                TOK_LOSS, TOK_OBS_BASE, TOK_TURN, TOK_WIN)
+
+ROWS, COLS = 6, 7
+
+
+def _wins(board, piece):
+    """board: (B, 6, 7). 4-in-a-row in any direction."""
+    b = (board == piece)
+    win = jnp.zeros(board.shape[0], bool)
+    # horizontal / vertical / two diagonals via static shifted slices
+    for dr, dc in ((0, 1), (1, 0), (1, 1), (1, -1)):
+        r_span = ROWS - 3 * abs(dr)
+        c0 = 3 if dc < 0 else 0
+        c_span = COLS - 3 * abs(dc)
+        acc = jnp.ones((board.shape[0], r_span, c_span), bool)
+        for i in range(4):
+            r = i * dr
+            c = c0 + i * dc
+            acc &= b[:, r:r + r_span, c:c + c_span]
+        win |= jnp.any(acc, axis=(1, 2))
+    return win
+
+
+class C4State(NamedTuple):
+    board: jax.Array     # (B, 6, 7) int32; row 0 = top, row 5 = bottom
+    done: jax.Array
+    reward: jax.Array
+
+
+def _drop(board, col, piece, active):
+    """Drop ``piece`` into ``col`` where ``active``; returns (board, legal)."""
+    B = board.shape[0]
+    colvals = jnp.take_along_axis(
+        board, col[:, None, None].repeat(ROWS, 1), axis=2)[:, :, 0]  # (B,6)
+    n_empty = jnp.sum(colvals == 0, axis=1)                          # (B,)
+    legal = n_empty > 0
+    row = jnp.clip(n_empty - 1, 0, ROWS - 1)
+    do = active & legal
+    updated = board.at[jnp.arange(B), row, col].set(
+        jnp.where(do, piece, board[jnp.arange(B), row, col]))
+    return jnp.where(do[:, None, None], updated, board), legal
+
+
+class ConnectFour:
+    n_actions = COLS
+    obs_len = 3 + ROWS * COLS    # BOS + 42 cells + result + turn marker - 42..
+
+    def __init__(self):
+        self.obs_len = 3 + ROWS * COLS
+
+    def reset(self, rng, batch: int) -> C4State:
+        del rng
+        return C4State(
+            board=jnp.zeros((batch, ROWS, COLS), jnp.int32),
+            done=jnp.zeros((batch,), bool),
+            reward=jnp.zeros((batch,), jnp.float32),
+        )
+
+    def legal_mask(self, state: C4State):
+        return state.board[:, 0, :] == 0                 # top row empty
+
+    def encode_obs(self, state: C4State, result_tok=None):
+        B = state.board.shape[0]
+        cells = (TOK_OBS_BASE + state.board).reshape(B, ROWS * COLS)
+        bos = jnp.full((B, 1), TOK_BOS, jnp.int32)
+        res = (jnp.full((B, 1), TOK_TURN, jnp.int32)
+               if result_tok is None else result_tok[:, None])
+        turn = jnp.full((B, 1), TOK_TURN, jnp.int32)
+        return jnp.concatenate([bos, cells, res, turn], axis=1)
+
+    def step(self, state: C4State, actions, rng) -> tuple:
+        B = actions.shape[0]
+        board, done, reward = state.board, state.done, state.reward
+
+        top_free = jnp.take_along_axis(
+            board[:, 0, :], actions[:, None], 1)[:, 0] == 0
+        illegal_now = (~top_free) & (~done)
+        play = (~done) & top_free
+
+        board1, _ = _drop(board, actions, 1, play)
+        agent_win = _wins(board1, 1) & play
+        draw1 = jnp.all(board1[:, 0, :] != 0, axis=1) & play & ~agent_win
+
+        cont = play & ~agent_win & ~draw1
+        free = board1[:, 0, :] == 0                      # (B,7)
+        gumbel = jax.random.gumbel(rng, (B, COLS))
+        opp_act = jnp.argmax(jnp.where(free, gumbel, -jnp.inf), axis=-1)
+        board2, _ = _drop(board1, opp_act, 2, cont)
+        opp_win = _wins(board2, 2) & cont
+        draw2 = jnp.all(board2[:, 0, :] != 0, axis=1) & cont & ~opp_win
+
+        new_done = done | illegal_now | agent_win | draw1 | opp_win | draw2
+        step_reward = (jnp.where(agent_win, 1.0, 0.0)
+                       + jnp.where(opp_win | illegal_now, -1.0, 0.0))
+        new_reward = jnp.where(done, reward, step_reward)
+
+        result_tok = jnp.where(
+            agent_win, TOK_WIN,
+            jnp.where(opp_win, TOK_LOSS,
+                      jnp.where(draw1 | draw2, TOK_DRAW,
+                                jnp.where(illegal_now, TOK_ILLEGAL,
+                                          TOK_TURN)))).astype(jnp.int32)
+        new_state = C4State(board=board2, done=new_done, reward=new_reward)
+        obs = self.encode_obs(new_state, result_tok)
+        edge = new_done & (~done)
+        return new_state, StepResult(reward=new_reward * edge,
+                                     done=new_done, obs_tokens=obs)

@@ -1,0 +1,106 @@
+"""Vectorized Tic-Tac-Toe (the paper's Fig. 1 industrial-practice task)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import (StepResult, TOK_BOS, TOK_DRAW, TOK_ILLEGAL,
+                                TOK_LOSS, TOK_OBS_BASE, TOK_TURN, TOK_WIN)
+
+_LINES = jnp.array([
+    [0, 1, 2], [3, 4, 5], [6, 7, 8],      # rows
+    [0, 3, 6], [1, 4, 7], [2, 5, 8],      # cols
+    [0, 4, 8], [2, 4, 6],                 # diagonals
+])
+
+
+class TTTState(NamedTuple):
+    board: jax.Array     # (B, 9) int32: 0 empty / 1 agent / 2 opponent
+    done: jax.Array      # (B,) bool
+    reward: jax.Array    # (B,) float32 terminal reward (sticky)
+
+
+class TicTacToe:
+    n_actions = 9
+    obs_len = 12         # BOS + 9 cells + result/turn + turn marker
+
+    def reset(self, rng, batch: int) -> TTTState:
+        del rng
+        return TTTState(
+            board=jnp.zeros((batch, 9), jnp.int32),
+            done=jnp.zeros((batch,), bool),
+            reward=jnp.zeros((batch,), jnp.float32),
+        )
+
+    @staticmethod
+    def _wins(board, piece):
+        vals = board[:, _LINES]                          # (B, 8, 3)
+        return jnp.any(jnp.all(vals == piece, axis=-1), axis=-1)
+
+    @staticmethod
+    def _full(board):
+        return jnp.all(board != 0, axis=-1)
+
+    def legal_mask(self, state: TTTState):
+        return state.board == 0                          # (B, 9)
+
+    def encode_obs(self, state: TTTState, result_tok=None):
+        """-> (B, obs_len) int32 tokens describing the board."""
+        B = state.board.shape[0]
+        cells = TOK_OBS_BASE + state.board               # (B,9)
+        bos = jnp.full((B, 1), TOK_BOS, jnp.int32)
+        res = (jnp.full((B, 1), TOK_TURN, jnp.int32)
+               if result_tok is None else result_tok[:, None])
+        turn = jnp.full((B, 1), TOK_TURN, jnp.int32)
+        return jnp.concatenate([bos, cells, res, turn], axis=1)
+
+    def step(self, state: TTTState, actions, rng) -> tuple:
+        """actions: (B,) int32 in [0, 9). Returns (state', StepResult)."""
+        B = actions.shape[0]
+        board, done, reward = state.board, state.done, state.reward
+
+        legal = jnp.take_along_axis(board, actions[:, None], 1)[:, 0] == 0
+        illegal_now = (~legal) & (~done)
+
+        # agent move (only where active & legal)
+        play = (~done) & legal
+        board1 = jnp.where(
+            play[:, None],
+            board.at[jnp.arange(B), actions].set(
+                jnp.where(play, 1, board[jnp.arange(B), actions])),
+            board)
+        agent_win = self._wins(board1, 1) & play
+        draw1 = self._full(board1) & play & ~agent_win
+
+        # opponent random legal move (only where game continues)
+        cont = play & ~agent_win & ~draw1
+        empt = board1 == 0
+        gumbel = jax.random.gumbel(rng, (B, 9))
+        opp_scores = jnp.where(empt, gumbel, -jnp.inf)
+        opp_act = jnp.argmax(opp_scores, axis=-1)
+        board2 = jnp.where(
+            cont[:, None],
+            board1.at[jnp.arange(B), opp_act].set(
+                jnp.where(cont, 2, board1[jnp.arange(B), opp_act])),
+            board1)
+        opp_win = self._wins(board2, 2) & cont
+        draw2 = self._full(board2) & cont & ~opp_win
+
+        new_done = done | illegal_now | agent_win | draw1 | opp_win | draw2
+        step_reward = (jnp.where(agent_win, 1.0, 0.0)
+                       + jnp.where(opp_win | illegal_now, -1.0, 0.0))
+        new_reward = jnp.where(done, reward, step_reward)
+
+        result_tok = jnp.where(
+            agent_win, TOK_WIN,
+            jnp.where(opp_win, TOK_LOSS,
+                      jnp.where(draw1 | draw2, TOK_DRAW,
+                                jnp.where(illegal_now, TOK_ILLEGAL,
+                                          TOK_TURN)))).astype(jnp.int32)
+        new_state = TTTState(board=board2, done=new_done, reward=new_reward)
+        obs = self.encode_obs(new_state, result_tok)
+        return new_state, StepResult(reward=new_reward * new_done
+                                     * (~done),    # emit once, on the edge
+                                     done=new_done, obs_tokens=obs)

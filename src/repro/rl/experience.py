@@ -1,0 +1,68 @@
+"""Experience batches: the intermediate data EARL's Data Dispatcher moves.
+
+An ``ExperienceBatch`` is exactly the paper's "intermediate training batch":
+tokens, log-probabilities, rewards, returns and auxiliary tensors (§1,
+Tab. 1). ``layout`` tags which stage/mesh produced it so the dispatcher can
+compute the source->target movement plan (§2 Data Dispatcher).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ExperienceBatch(NamedTuple):
+    tokens: jax.Array          # (B, T) int32 — full episode contexts
+    gen_mask: jax.Array        # (B, T) bool  — policy-generated positions
+    loss_mask: jax.Array       # (B, T) bool  — positions included in loss
+    logprobs: jax.Array        # (B, T) f32   — rollout-policy log-probs
+    ref_logprobs: jax.Array    # (B, T) f32   — reference-model log-probs
+    rewards: jax.Array         # (B,)   f32   — terminal episode rewards
+    returns: jax.Array         # (B,)   f32   — reward-to-go at episode start
+    advantages: jax.Array      # (B,)   f32
+    context_len: jax.Array     # (B,)   int32 — episode-level context length
+    truncated: jax.Array       # (B,)   bool  — hit the hard context limit
+
+    @property
+    def batch(self) -> int:
+        return self.tokens.shape[0]
+
+    @property
+    def seq(self) -> int:
+        return self.tokens.shape[1]
+
+    def nbytes(self) -> int:
+        return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                   for x in self)
+
+    def with_(self, **kw) -> "ExperienceBatch":
+        return self._replace(**kw)
+
+
+def zeros_like_experience(batch: int, seq: int) -> ExperienceBatch:
+    return ExperienceBatch(
+        tokens=jnp.zeros((batch, seq), jnp.int32),
+        gen_mask=jnp.zeros((batch, seq), bool),
+        loss_mask=jnp.zeros((batch, seq), bool),
+        logprobs=jnp.zeros((batch, seq), jnp.float32),
+        ref_logprobs=jnp.zeros((batch, seq), jnp.float32),
+        rewards=jnp.zeros((batch,), jnp.float32),
+        returns=jnp.zeros((batch,), jnp.float32),
+        advantages=jnp.zeros((batch,), jnp.float32),
+        context_len=jnp.zeros((batch,), jnp.int32),
+        truncated=jnp.zeros((batch,), bool),
+    )
+
+
+def experience_specs(batch: int, seq: int):
+    """ShapeDtypeStruct tree for dry-runs (no allocation)."""
+    z = zeros_like_experience(1, 1)
+    def spec(x):
+        shape = tuple(batch if d == 0 else (seq if d == 1 else s)
+                      for d, s in enumerate(x.shape))
+        return jax.ShapeDtypeStruct(shape, x.dtype)
+    return ExperienceBatch(*(spec(x) for x in z))

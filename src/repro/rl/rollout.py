@@ -1,0 +1,196 @@
+"""Multi-turn agentic rollout engine (the paper's Rollout stage, Fig. 2 ①).
+
+Per turn: the policy decodes tokens one at a time (temperature sampling)
+until it emits an *action token* (or hits the per-turn cap); the action is
+applied to the vectorized environment; the environment's observation tokens
+are then teacher-forced into the context, and the next turn begins. The
+loop ends when every episode is done or the context limit would be exceeded
+(a *truncation* — the failure mode of paper Fig. 1, which EARL's dynamic
+parallelism exists to push out).
+
+Action protocol: token ids [ACTION_BASE, ACTION_BASE + n_actions) are action
+tokens; any other sampled token is "reasoning". The fallback when the cap is
+reached is ``last_token % n_actions``.
+
+Decoding uses the model's jitted ``decode_step`` + KV cache; the per-token
+python loop is the CPU-friendly reference path (a ``lax.scan`` generation
+body is what the compiled TPU rollout uses — see launch/serve shapes, where
+``serve_step`` is exactly one of these decode steps).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl.algo import reinforce_advantages, token_logprobs
+from repro.rl.envs.base import TOK_PAD
+from repro.rl.experience import ExperienceBatch
+
+ACTION_BASE = 32
+
+
+@dataclass
+class RolloutStats:
+    turn_lengths: np.ndarray        # (B, max_turns) generated tokens / turn
+    context_lengths: np.ndarray     # (B,) final episode context length
+    n_turns: np.ndarray             # (B,)
+    truncated: np.ndarray           # (B,) bool
+    mean_turn_len: float = 0.0
+    mean_context_len: float = 0.0
+    mean_return: float = 0.0
+
+
+@dataclass
+class RolloutEngine:
+    model: object                   # repro.models.Model
+    env: object
+    max_turns: int = 4
+    max_turn_tokens: int = 8
+    max_context: int = 256
+    temperature: float = 1.0
+
+    def __post_init__(self):
+        cfg = self.model.cfg
+        assert ACTION_BASE + self.env.n_actions <= cfg.vocab_size
+        self._decode = jax.jit(
+            lambda p, tok, cache, adv: self.model.decode_step(
+                p, tok, cache, advance=adv))
+        self._prefill = jax.jit(
+            lambda p, toks, cache: self.model.prefill(p, toks, cache))
+
+    # ------------------------------------------------------------------
+    def run(self, params, rng, batch: int, *, extra=None):
+        """Roll out ``batch`` episodes. Returns (ExperienceBatch, stats)."""
+        env, model = self.env, self.model
+        T = self.max_context
+        B = batch
+
+        state = env.reset(rng, B)
+        obs = env.encode_obs(state)                       # (B, obs_len)
+
+        tokens = np.full((B, T), TOK_PAD, np.int32)
+        gen_mask = np.zeros((B, T), bool)
+        logprobs = np.zeros((B, T), np.float32)
+        turn_lengths = np.zeros((B, self.max_turns), np.int32)
+        n_turns = np.zeros(B, np.int32)
+        truncated = np.zeros(B, bool)
+
+        obs_np = np.asarray(obs)
+        olen = obs_np.shape[1]
+        tokens[:, :olen] = obs_np
+        pos = np.full(B, olen, np.int32)                  # per-row write ptr
+
+        cache = model.init_cache(B, T)
+        logits_buf, cache = self._prefill(
+            params, jnp.asarray(tokens[:, :olen]), cache)
+        done = np.zeros(B, bool)
+        rng = jax.random.fold_in(rng, 1)
+
+        def advance_rows(fed_tokens, mask):
+            """Feed per-row tokens; only ``mask`` rows advance."""
+            nonlocal logits_buf, cache
+            new_logits, cache2 = self._decode(
+                params, jnp.asarray(fed_tokens), cache,
+                jnp.asarray(mask))
+            logits_buf = jnp.where(jnp.asarray(mask)[:, None], new_logits,
+                                   logits_buf)
+            cache = cache2
+
+        for turn in range(self.max_turns):
+            if done.all():
+                break
+            # rows that cannot fit another turn + observation get truncated
+            room = pos + self.max_turn_tokens + olen <= T
+            truncated |= (~done) & (~room)
+            active = (~done) & room
+            if not active.any():
+                break
+
+            waiting = ~active                            # rows skipping turn
+            acted = waiting.copy()
+            actions = np.zeros(B, np.int32)
+            last_tok = np.zeros(B, np.int32)
+            for t in range(self.max_turn_tokens):
+                write = ~acted
+                if not write.any():
+                    break
+                rng, krng = jax.random.split(rng)
+                lg = logits_buf / max(self.temperature, 1e-4)
+                sampled = jax.random.categorical(krng, lg, axis=-1)
+                lp = token_logprobs(lg[:, None, :], sampled[:, None])[:, 0]
+                sampled_np = np.asarray(sampled, np.int32)
+                lp_np = np.asarray(lp, np.float32)
+
+                rows = np.nonzero(write)[0]
+                tokens[rows, pos[rows]] = sampled_np[rows]
+                gen_mask[rows, pos[rows]] = True
+                logprobs[rows, pos[rows]] = lp_np[rows]
+                pos[rows] += 1
+                turn_lengths[rows, turn] += 1
+                last_tok[rows] = sampled_np[rows]
+
+                is_action = ((sampled_np >= ACTION_BASE) &
+                             (sampled_np < ACTION_BASE + env.n_actions))
+                newly = write & is_action
+                actions[newly] = sampled_np[newly] - ACTION_BASE
+                acted |= newly
+
+                advance_rows(sampled_np, write)
+
+            # fallback action for rows that never emitted an action token
+            never = active & ~(acted & active)
+            actions[never] = last_tok[never] % env.n_actions
+            n_turns[active] += 1
+
+            # env transition (inactive rows absorb inside env.step)
+            rng, erng = jax.random.split(rng)
+            env_actions = np.where(active, actions, 0).astype(np.int32)
+            # freeze finished rows by making their action a no-op via done
+            state, res = env.step(state, jnp.asarray(env_actions), erng)
+            res_obs = np.asarray(res.obs_tokens)
+            new_done = np.asarray(res.done)
+
+            # teacher-force the observation for still-running rows
+            feed = active & ~new_done
+            if feed.any():
+                for j in range(olen):
+                    col_tok = np.where(feed, res_obs[:, j],
+                                       TOK_PAD).astype(np.int32)
+                    rows = np.nonzero(feed)[0]
+                    tokens[rows, pos[rows]] = col_tok[rows]
+                    pos[rows] += 1
+                    advance_rows(col_tok, feed)
+            done |= new_done | truncated
+
+        rewards = np.asarray(state.reward, np.float32)
+        # truncated episodes: zero reward (the Fig. 1 "low-quality data")
+        rewards = np.where(truncated, 0.0, rewards)
+
+        exp = ExperienceBatch(
+            tokens=jnp.asarray(tokens),
+            gen_mask=jnp.asarray(gen_mask),
+            loss_mask=jnp.asarray(gen_mask),
+            logprobs=jnp.asarray(logprobs),
+            ref_logprobs=jnp.zeros((B, T), jnp.float32),
+            rewards=jnp.asarray(rewards),
+            returns=jnp.asarray(rewards),
+            advantages=jnp.asarray(reinforce_advantages(jnp.asarray(rewards))),
+            context_len=jnp.asarray(pos),
+            truncated=jnp.asarray(truncated),
+        )
+        tl = turn_lengths[turn_lengths > 0]
+        stats = RolloutStats(
+            turn_lengths=turn_lengths,
+            context_lengths=pos.copy(),
+            n_turns=n_turns,
+            truncated=truncated,
+            mean_turn_len=float(tl.mean()) if tl.size else 0.0,
+            mean_context_len=float(pos.mean()),
+            mean_return=float(rewards.mean()),
+        )
+        return exp, stats

@@ -1,0 +1,1 @@
+from repro.utils.tree import tree_size_bytes, tree_param_count, tree_map_with_path

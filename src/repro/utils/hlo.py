@@ -1,0 +1,325 @@
+"""HLO text analysis: collective-byte accounting for the roofline model.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic, so we parse the (stable)HLO / HLO text and sum the operand sizes of
+every communication op. This is the data source for the roofline's
+"collective term" and for the Data Dispatcher's bytes-through-bottleneck
+accounting (paper Fig. 4, hardware-independent form).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# HLO dtype name -> bytes per element
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+)
+
+# Matches e.g. ``bf16[128,4096,896]`` or ``f32[16]{0}``; scalar = ``f32[]``.
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+# An HLO instruction line:  %name = <shape-or-tuple> op-name(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?[%\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast)"
+    r"(?:-start|-done)?\b",
+)
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of every array shape appearing in ``shape_text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        dtype, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Bytes moved per collective kind, summed over the whole module."""
+
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: {self.count_by_kind[k]}x {self.bytes_by_kind[k] / 2**20:.1f} MiB"
+            for k in sorted(self.bytes_by_kind)
+        ]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in an HLO module.
+
+    We use the *result* shape of each collective instruction (for -start ops
+    XLA tuples the operand and result; the regex captures the whole shape
+    text, so in that case we halve to avoid double counting the aliased
+    input buffer).
+    """
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m is None:
+            continue
+        shape_text, kind = m.groups()
+        # -done ops re-mention the buffer; count each logical collective once.
+        if f"{kind}-done" in line:
+            continue
+        b = _shape_bytes(shape_text)
+        if f"{kind}-start" in line and shape_text.startswith("("):
+            # (operand, result[, contexts...]) tuple: halve the aliased pair.
+            b = b // 2
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    _ = seen_done
+    return stats
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    """Count instructions of a given HLO op (e.g. 'fusion', 'dot')."""
+    pat = re.compile(rf"=\s*[^\s]+\s+{re.escape(opname)}[\s(]")
+    return sum(1 for line in hlo_text.splitlines() if pat.search(line))
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware full-module cost model
+# ---------------------------------------------------------------------------
+# XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+# ``lax.scan`` over 126 layers reports the cost of a single layer body
+# (verified empirically: flops(2 layers) == flops(8 layers)). Since every
+# model in this repo scans its layer stack, we compute module cost ourselves
+# by walking the call graph and weighting while-loop bodies by the
+# ``known_trip_count`` XLA records in backend_config.
+
+from typing import Optional
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+# shape is either a tuple "(...)" (no nested parens appear inside HLO
+# tuple types) or a single token like "bf16[24,56]{1,0}".
+_INSTR_DEF_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_dims(shape_text: str):
+    """'bf16[24,56,304]' -> [(dtype, [24,56,304])]; tuples -> all entries."""
+    out = []
+    for m in _SHAPE_RE.finditer(shape_text):
+        dtype, dims = m.groups()
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+class _Instr:
+    __slots__ = ("name", "shape_text", "op", "line")
+
+    def __init__(self, name, shape_text, op, line):
+        self.name = name
+        self.shape_text = shape_text
+        self.op = op
+        self.line = line
+
+
+class _Computation:
+    def __init__(self, name):
+        self.name = name
+        self.instrs = []
+        self.shapes = {}                # %name -> shape text
+
+    def add(self, name, shape, op, line):
+        self.instrs.append(_Instr(name, shape, op, line))
+        self.shapes[name] = shape
+
+
+def _split_computations(hlo_text: str):
+    comps = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        h = _COMP_HDR_RE.match(line)
+        if h:
+            cur = _Computation(h.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_DEF_RE.match(line)
+        if m:
+            cur.add(m.group(1), m.group(2).strip(), m.group(3), line)
+    return comps, entry
+
+
+def _dot_flops(instr, shapes) -> float:
+    """2 * |result| * prod(lhs contracting dims)."""
+    parsed = _parse_dims(instr.shape_text)
+    if not parsed:
+        return 0.0
+    result_elems = 1
+    for d in parsed[0][1]:
+        result_elems *= d
+    cm = _CONTRACT_RE.search(instr.line)
+    contract = 1
+    if cm:
+        operands = _OPERAND_RE.findall(instr.line.split("(", 1)[1])
+        lhs = next((shapes[o] for o in operands if o in shapes), None)
+        if lhs:
+            dims = _parse_dims(lhs)
+            if dims:
+                dd = dims[0][1]
+                for i in (int(i) for i in cm.group(1).split(",") if i):
+                    if i < len(dd):
+                        contract *= dd[i]
+    return 2.0 * result_elems * contract
+
+
+def _instr_bytes(instr, shapes) -> int:
+    """Output bytes + operand bytes (the HBM-traffic model for one op)."""
+    total = _shape_bytes(instr.shape_text)
+    if "(" in instr.line:
+        args = instr.line.split("(", 1)[1]
+        for op_name in _OPERAND_RE.findall(args):
+            if op_name in shapes:
+                total += _shape_bytes(shapes[op_name])
+    return total
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota"}
+
+_COLLECTIVE_SET = set(COLLECTIVE_OPS) | {
+    f"{k}-start" for k in COLLECTIVE_OPS}
+
+
+@dataclass
+class FullCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_count: float = 0.0       # trip-weighted op instances
+    collective_by_kind: dict = field(default_factory=dict)
+
+    def scaled(self, k: float) -> "FullCost":
+        return FullCost(self.flops * k, self.bytes_accessed * k,
+                        self.collective_bytes * k, self.collective_count * k,
+                        {n: b * k for n, b in self.collective_by_kind.items()})
+
+    def plus(self, o: "FullCost") -> "FullCost":
+        kinds = dict(self.collective_by_kind)
+        for n, b in o.collective_by_kind.items():
+            kinds[n] = kinds.get(n, 0) + b
+        return FullCost(self.flops + o.flops,
+                        self.bytes_accessed + o.bytes_accessed,
+                        self.collective_bytes + o.collective_bytes,
+                        self.collective_count + o.collective_count, kinds)
+
+
+def full_cost(hlo_text: str) -> FullCost:
+    """Trip-count-aware module cost (per-device, post-SPMD optimized HLO).
+
+    flops: dot ops (elementwise is noise next to matmuls).
+    bytes: operands+outputs of every top-level instruction; fusion-internal
+    intermediates stay on-chip and are not counted, but fusion-internal
+    dot FLOPs are. while bodies are weighted by XLA's known_trip_count.
+    """
+    comps, entry = _split_computations(hlo_text)
+    if not comps:
+        return FullCost()
+    if entry is None:
+        entry = next((n for n in comps if n.startswith("main")),
+                     list(comps)[-1])
+
+    memo = {}
+
+    def cost_of(name: str, *, bytes_visible: bool) -> FullCost:
+        key = (name, bytes_visible)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        if comp is None:
+            return FullCost()
+        memo[key] = FullCost()          # cycle guard
+        total = FullCost()
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                total.flops += _dot_flops(ins, comp.shapes)
+            if bytes_visible and ins.op not in _SKIP_BYTES_OPS:
+                total.bytes_accessed += _instr_bytes(ins, comp.shapes)
+            base_op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base_op in COLLECTIVE_OPS and not ins.op.endswith("-done"):
+                b = _shape_bytes(ins.shape_text)
+                if ins.op.endswith("-start") and ins.shape_text.startswith("("):
+                    b //= 2
+                total.collective_bytes += b
+                total.collective_count += 1
+                total.collective_by_kind[base_op] = (
+                    total.collective_by_kind.get(base_op, 0) + b)
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trip = int(tm.group(1)) if tm else 1
+                refs = dict(re.findall(r"(body|condition)=%([\w.\-]+)",
+                                       ins.line))
+                if "body" in refs:
+                    total = total.plus(cost_of(
+                        refs["body"], bytes_visible=True).scaled(trip))
+                if "condition" in refs:
+                    total = total.plus(cost_of(
+                        refs["condition"], bytes_visible=True).scaled(trip))
+            elif ins.op == "fusion":
+                cm = re.search(r"calls=%([\w.\-]+)", ins.line)
+                if cm:            # fusion internals: flops count, bytes don't
+                    total = total.plus(cost_of(cm.group(1),
+                                               bytes_visible=False))
+            elif ins.op == "call":
+                cm = re.search(r"to_apply=%([\w.\-]+)", ins.line)
+                if cm:
+                    total = total.plus(cost_of(cm.group(1),
+                                               bytes_visible=bytes_visible))
+            elif ins.op == "conditional":
+                for b_name in _OPERAND_RE.findall(
+                        ins.line.split("branch_computations=", 1)[-1]
+                        if "branch_computations=" in ins.line else ""):
+                    total = total.plus(cost_of(b_name,
+                                               bytes_visible=bytes_visible))
+        memo[key] = total
+        return total
+
+    return cost_of(entry, bytes_visible=True)

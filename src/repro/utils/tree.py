@@ -1,0 +1,62 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_param_count(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes across all leaves (uses leaf dtype itemsize)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        itemsize = jnp.dtype(x.dtype).itemsize
+        total += int(np.prod(x.shape)) * itemsize
+    return total
+
+
+def tree_map_with_path(fn, tree):
+    """jax.tree_util.tree_map_with_path with '/'-joined string keys."""
+
+    def _fn(path, leaf):
+        key = "/".join(_key_str(p) for p in path)
+        return fn(key, leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def _key_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def tree_flatten_with_names(tree):
+    """Return [(name, leaf)] with '/'-joined names, plus treedef."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append(("/".join(_key_str(p) for p in path), leaf))
+    return out, treedef
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def tree_global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )

@@ -1,0 +1,15 @@
+import jax
+import pytest
+
+# Tests run on the single real CPU device. Multi-device behaviour is tested
+# in subprocesses that set XLA_FLAGS themselves (see test_dispatcher.py,
+# test_dryrun.py) — never globally, per the dry-run isolation rule.
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,274 @@
+"""End-to-end system tests: the Fig. 2 EARL loop, train steps, sharding
+rules, checkpointing, HLO cost model, and the data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core.stages import EarlTrainer
+from repro.core.train_step import (make_lm_train_step, make_ref_logprob_step,
+                                   make_rl_train_step, make_serve_step)
+from repro.models.registry import build_model
+from repro.optim.adamw import adamw, apply_updates
+from repro.rl.envs import make_env
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestTrainSteps:
+    def test_lm_loss_decreases_on_fixed_batch(self, small_model, rng):
+        cfg, model, params = small_model
+        opt = adamw(3e-3, weight_decay=0.0)
+        opt_state = opt.init(params)
+        step = jax.jit(make_lm_train_step(model, opt))
+        tokens = jax.random.randint(rng, (4, 32), 0, cfg.vocab_size)
+        labels = jnp.roll(tokens, -1, axis=1)
+        losses = []
+        for _ in range(8):
+            params, opt_state, m = step(params, opt_state, tokens, labels)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.1, losses
+
+    def test_ref_logprob_step_matches_forward(self, small_model, rng):
+        cfg, model, params = small_model
+        tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+        ref_step = make_ref_logprob_step(model)
+        lp = ref_step(params, tokens)
+        assert lp.shape == (2, 16)
+        assert bool((lp[:, 0] == 0).all())          # position 0 zero-filled
+        logits, _ = model.forward(params, tokens)
+        from repro.rl.algo import token_logprobs
+        expect = token_logprobs(logits[:, :-1], tokens[:, 1:])
+        np.testing.assert_allclose(np.asarray(lp[:, 1:]), np.asarray(expect),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_rl_train_step_lowers_pg_loss_direction(self, small_model, rng):
+        cfg, model, params = small_model
+        from repro.rl.experience import zeros_like_experience
+        B, T = 4, 24
+        exp = zeros_like_experience(B, T)
+        tokens = jax.random.randint(rng, (B, T), 0, cfg.vocab_size)
+        mask = jnp.zeros((B, T), bool).at[:, 4:12].set(True)
+        exp = exp.with_(tokens=tokens, gen_mask=mask, loss_mask=mask,
+                        advantages=jnp.array([1.0, 1.0, -1.0, -1.0]))
+        opt = adamw(1e-3, weight_decay=0.0)
+        step = jax.jit(make_rl_train_step(model, opt))
+        params2, _, metrics = step(params, opt.init(params), exp)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        # the positively-advantaged rows' tokens must gain probability
+        ref = make_ref_logprob_step(model)
+        before = ref(params, tokens)
+        after = ref(params2, tokens)
+        gain = np.asarray(((after - before) * mask).sum(axis=1))
+        assert gain[0] > 0 and gain[1] > 0
+        assert gain[2] < 0 and gain[3] < 0
+
+    def test_serve_step_emits_tokens(self, small_model, rng):
+        cfg, model, params = small_model
+        serve = jax.jit(make_serve_step(model))
+        cache = model.init_cache(2, 16)
+        _, cache = model.prefill(
+            params, jax.random.randint(rng, (2, 8), 0, cfg.vocab_size),
+            cache)
+        tok = jnp.array([1, 2], jnp.int32)
+        next_tok, logits, cache = serve(params, tok, cache)
+        assert next_tok.shape == (2,)
+        assert bool((next_tok >= 0).all())
+        assert int(cache.pos[0]) == 9
+
+
+class TestEarlTrainer:
+    def test_fig2_loop_runs_and_records(self):
+        cfg = get_smoke_config("qwen2-0.5b")
+        model = build_model(cfg)
+        env = make_env("tictactoe")
+        tr = EarlTrainer(model=model, env=env, batch_size=4, max_turns=2,
+                         max_turn_tokens=4, max_context=96, kl_coef=0.05)
+        params, opt_state, hist = tr.train(3)
+        assert len(hist) == 3
+        for rec in hist:
+            assert np.isfinite(rec.loss)
+            assert 0 <= rec.truncated_frac <= 1
+            assert rec.mean_context_len > 0
+
+    def test_selector_hook_fires_in_loop(self):
+        """A synthetic selector whose bucket boundary sits below the
+        observed context forces a switch at step 1."""
+        from repro.core.parallelism_selector import (ContextBuckets,
+                                                     ParallelismSelector,
+                                                     ProfileEntry)
+        from repro.core.resharding import MeshConfig
+        a = MeshConfig("a", dp=1, tp=1)
+        b = MeshConfig("b", dp=1, tp=1, fsdp=False)
+        measure = lambda cfg, ctx: ProfileEntry(
+            cfg, ctx, tgs=(2.0 if (cfg.name == "b") == (ctx > 8) else 1.0),
+            feasible=True)
+        sel = ParallelismSelector([a, b], measure, ContextBuckets((8,)),
+                                  ema_alpha=1.0)
+        sel.profile()
+
+        cfg = get_smoke_config("qwen2-0.5b")
+        model = build_model(cfg)
+        env = make_env("tictactoe")
+        tr = EarlTrainer(model=model, env=env, selector=sel, batch_size=2,
+                         max_turns=1, max_turn_tokens=2, max_context=64)
+        params, opt_state, hist = tr.train(2)
+        # rollout contexts are > 8 tokens, so step 1 must switch a -> b
+        assert hist[1].selector_switch is not None
+        assert hist[1].selector_switch["to"] == "b"
+
+
+class TestShardingRules:
+    def test_logical_to_physical_divisibility_fallback(self):
+        code = """
+        import jax, jax.numpy as jnp
+        from repro.core.resharding import MeshConfig, logical_to_physical
+        mesh = MeshConfig('m', dp=2, tp=4).make_mesh()
+        fb = []
+        s = logical_to_physical((14, 64), ('heads', None), mesh,
+                                fallbacks=fb)
+        assert s.spec == jax.sharding.PartitionSpec(None, None), s.spec
+        assert fb, 'fallback must be recorded'
+        s2 = logical_to_physical((16, 64), ('heads', None), mesh)
+        assert s2.spec == jax.sharding.PartitionSpec('model', None), s2.spec
+        print('OK')
+        """
+        from tests.test_dispatcher import run_subprocess
+        assert "OK" in run_subprocess(code)
+
+    def test_param_shardings_cover_tree(self, small_model):
+        cfg, model, _ = small_model
+        from repro.core.resharding import param_shardings
+        # single-device mesh: everything replicated but tree shape matches
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                                 ("data", "model"))
+        sh = param_shardings(model, mesh)
+        n_params = len(jax.tree.leaves(model.abstract()))
+        assert len(jax.tree.leaves(sh)) == n_params
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, small_model, tmp_path):
+        cfg, model, params = small_model
+        from repro.checkpoint.checkpoint import (restore_checkpoint,
+                                                 save_checkpoint)
+        tree = {"params": params, "step": jnp.array(3)}
+        save_checkpoint(str(tmp_path), 3, tree)
+        out = restore_checkpoint(str(tmp_path), 3, tree)
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(out["params"])):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+class TestHloCostModel:
+    def test_matmul_flops_exact(self):
+        from repro.utils.hlo import full_cost
+        f = lambda a, b: a @ b
+        c = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((128, 256), jnp.float32),
+            jax.ShapeDtypeStruct((256, 512), jnp.float32)).compile()
+        fc = full_cost(c.as_text())
+        assert fc.flops == pytest.approx(2 * 128 * 256 * 512, rel=0.01)
+
+    def test_scan_flops_scale_with_trip_count(self):
+        from repro.utils.hlo import full_cost
+
+        def make(n):
+            def g(x, ws):
+                return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+            return jax.jit(g).lower(
+                jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                jax.ShapeDtypeStruct((n, 64, 64), jnp.float32)).compile()
+
+        f4 = full_cost(make(4).as_text()).flops
+        f16 = full_cost(make(16).as_text()).flops
+        assert f16 == pytest.approx(4 * f4, rel=0.05)
+
+    def test_collective_bytes_all_reduce(self):
+        from tests.test_dispatcher import run_subprocess
+        out = run_subprocess("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.resharding import MeshConfig
+        from repro.utils.hlo import full_cost
+        mesh = MeshConfig('m', dp=8, tp=1).make_mesh()
+        x_sh = NamedSharding(mesh, P('data'))
+        f = jax.jit(lambda x: jnp.sum(x), in_shardings=(x_sh,))
+        c = f.lower(jax.ShapeDtypeStruct((1024,), jnp.float32)).compile()
+        fc = full_cost(c.as_text())
+        assert fc.collective_bytes > 0, fc
+        print('OK', fc.collective_by_kind)
+        """)
+        assert "OK" in out
+
+
+class TestDataPipeline:
+    def test_packing_covers_all_tokens(self):
+        from repro.data.pipeline import SyntheticLMDataset, pack_documents
+        ds = SyntheticLMDataset(vocab_size=97, seed=1, mean_doc_len=50)
+        docs = ds.documents(20)
+        rows = pack_documents(docs, 64)
+        n_in = sum(len(d) + 1 for d in docs)          # + EOS each
+        assert rows.shape[1] == 64
+        assert rows.size >= n_in
+        assert rows.dtype == np.int32
+
+    def test_batches_deterministic_with_seed(self):
+        from repro.data.pipeline import make_batches
+        rows = np.arange(40).reshape(10, 4)
+        b1 = list(make_batches(rows, 3, shuffle_seed=7))
+        b2 = list(make_batches(rows, 3, shuffle_seed=7))
+        for a, b in zip(b1, b2):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestMicrobatching:
+    def test_microbatch_grads_match_full_batch(self, small_model, rng):
+        """§Perf-D: gradient accumulation over microbatches produces the
+        same update as the full batch (up to f32 summation order)."""
+        cfg, model, params = small_model
+        opt = adamw(1e-2, weight_decay=0.0)
+        tokens = jax.random.randint(rng, (8, 16), 0, cfg.vocab_size)
+        labels = jnp.roll(tokens, -1, axis=1)
+
+        full = make_lm_train_step(model, opt)
+        micro = make_lm_train_step(model, opt, microbatch=4)
+        p_full, _, m_full = full(params, opt.init(params), tokens, labels)
+        p_micro, _, m_micro = micro(params, opt.init(params), tokens, labels)
+        assert float(m_full["loss"]) == pytest.approx(
+            float(m_micro["loss"]), rel=2e-3)
+        # Adam normalizes by sqrt(v): near-zero grads amplify f32-summation
+        # order differences to full step size, so compare the global
+        # agreement fraction (small norm-layer leaves would otherwise
+        # dominate a per-leaf check).
+        flat_f = np.concatenate([np.asarray(x, np.float32).ravel()
+                                 for x in jax.tree.leaves(p_full)])
+        flat_m = np.concatenate([np.asarray(x, np.float32).ravel()
+                                 for x in jax.tree.leaves(p_micro)])
+        agree = np.isclose(flat_f, flat_m, atol=5e-3, rtol=5e-2).mean()
+        assert agree > 0.995, agree
+        # and the update directions are globally aligned
+        base = np.concatenate([np.asarray(x, np.float32).ravel()
+                               for x in jax.tree.leaves(params)])
+        df, dm = flat_f - base, flat_m - base
+        cos = float(df @ dm / (np.linalg.norm(df) * np.linalg.norm(dm)))
+        assert cos > 0.98, cos
+
+    def test_microbatch_indivisible_falls_back(self, small_model, rng):
+        cfg, model, params = small_model
+        opt = adamw(1e-3, weight_decay=0.0)
+        step = make_lm_train_step(model, opt, microbatch=3)   # 8 % 3 != 0
+        tokens = jax.random.randint(rng, (8, 16), 0, cfg.vocab_size)
+        labels = jnp.roll(tokens, -1, axis=1)
+        _, _, m = step(params, opt.init(params), tokens, labels)
+        assert bool(jnp.isfinite(m["loss"]))

@@ -1,0 +1,172 @@
+"""RL substrate tests: advantage estimators, losses, environments, and the
+multi-turn rollout engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.rl.algo import (group_relative_advantages, policy_gradient_loss,
+                           reinforce_advantages, returns_to_go,
+                           token_logprobs)
+from repro.rl.envs import make_env
+from repro.rl.experience import ExperienceBatch, zeros_like_experience
+
+
+class TestAdvantages:
+    @given(st.lists(st.floats(min_value=-10, max_value=10,
+                              allow_nan=False), min_size=2, max_size=64))
+    @settings(max_examples=100, deadline=None)
+    def test_loo_baseline_is_mean_zero_ish(self, rewards):
+        """Leave-one-out REINFORCE advantages sum to ~0 when rewards vary."""
+        r = jnp.asarray(rewards, jnp.float32)
+        adv = reinforce_advantages(r)
+        # identity: sum of LOO advantages = sum(r) - sum(loo) = 0 exactly
+        # when every loo is the mean of the others: B/(B-1) * (sum - ...)
+        assert float(jnp.abs(jnp.mean(adv))) < 1e-3 + 0.1 * float(
+            jnp.std(r))
+
+    def test_loo_is_independent_of_own_reward(self):
+        r1 = jnp.array([1.0, 0.0, 0.0, 0.0])
+        r2 = jnp.array([5.0, 0.0, 0.0, 0.0])
+        a1 = reinforce_advantages(r1)
+        a2 = reinforce_advantages(r2)
+        # baseline for row 0 is mean of others — unchanged
+        assert float(a1[0] - (1.0 - 0.0)) == pytest.approx(0.0)
+        assert float(a2[0] - (5.0 - 0.0)) == pytest.approx(0.0)
+
+    def test_group_advantages_normalize_per_group(self):
+        r = jnp.array([1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0])
+        adv = group_relative_advantages(r, group_size=4)
+        g = np.asarray(adv).reshape(2, 4)
+        np.testing.assert_allclose(g.mean(axis=1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(g.std(axis=1), 1.0, atol=1e-2)
+
+    def test_returns_to_go(self):
+        r = jnp.array([[0.0, 0.0, 1.0]])
+        np.testing.assert_allclose(np.asarray(returns_to_go(r, 0.5)[0]),
+                                   [0.25, 0.5, 1.0])
+
+
+class TestLoss:
+    def test_token_logprobs_matches_take_along_axis(self, rng):
+        logits = jax.random.normal(rng, (2, 5, 17))
+        toks = jax.random.randint(jax.random.fold_in(rng, 1), (2, 5), 0, 17)
+        lp = token_logprobs(logits, toks)
+        expect = jnp.take_along_axis(
+            jax.nn.log_softmax(logits, -1), toks[..., None], -1)[..., 0]
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(expect),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_reinforce_gradient_direction(self, rng):
+        """Positive-advantage tokens get their logprob pushed UP."""
+        logits = jnp.zeros((1, 1, 4))
+        toks = jnp.array([[2]])
+        mask = jnp.ones((1, 1))
+
+        def loss_fn(lg):
+            lp = token_logprobs(lg, toks)
+            loss, _ = policy_gradient_loss(lp, jnp.array([1.0]), mask)
+            return loss
+
+        g = jax.grad(loss_fn)(logits)
+        assert float(g[0, 0, 2]) < 0          # decrease loss => raise logit
+
+    def test_ppo_clip_caps_ratio(self):
+        lp_new = jnp.array([[1.0]])           # ratio = e
+        lp_old = jnp.array([[0.0]])
+        mask = jnp.ones((1, 1))
+        loss, m = policy_gradient_loss(lp_new, jnp.array([1.0]), mask,
+                                       old_logprobs=lp_old, clip_eps=0.2)
+        assert float(loss) == pytest.approx(-1.2)   # clipped at 1+eps
+        assert float(m["clip_frac"]) == 1.0
+
+    def test_kl_penalty_zero_at_match(self):
+        lp = jnp.array([[0.5, -0.3]])
+        mask = jnp.ones((1, 2))
+        loss_with, m = policy_gradient_loss(lp, jnp.array([0.0]), mask,
+                                            ref_logprobs=lp, kl_coef=0.1)
+        assert float(m["kl"]) == pytest.approx(0.0, abs=1e-6)
+
+
+@pytest.mark.parametrize("env_name", ["tictactoe", "connect_four"])
+class TestEnvs:
+    def test_reset_shapes(self, env_name, rng):
+        env = make_env(env_name)
+        state = env.reset(rng, 4)
+        obs = env.encode_obs(state)
+        assert obs.shape == (4, env.obs_len)
+        assert bool((obs >= 0).all())
+
+    def test_episode_terminates_and_rewards_bounded(self, env_name, rng):
+        env = make_env(env_name)
+        B = 8
+        state = env.reset(rng, B)
+        for t in range(50):
+            legal = np.asarray(env.legal_mask(state))
+            acts = np.array([np.flatnonzero(row)[0] if row.any() else 0
+                             for row in legal], np.int32)
+            rng, sub = jax.random.split(rng)
+            state, res = env.step(state, jnp.asarray(acts), sub)
+            if bool(np.asarray(res.done).all()):
+                break
+        assert bool(np.asarray(state.done).all()), "episodes must terminate"
+        r = np.asarray(state.reward)
+        assert ((r >= -1.0) & (r <= 1.0)).all()
+
+    def test_repeated_action_eventually_ends_episode(self, env_name, rng):
+        """Hammering one action must terminate (illegal-move rule in
+        tictactoe; column-full or win/loss in connect_four)."""
+        env = make_env(env_name)
+        state = env.reset(rng, 2)
+        for _ in range(10):
+            rng, sub = jax.random.split(rng)
+            state, res = env.step(state, jnp.array([0, 0]), sub)
+        done = np.asarray(state.done)
+        reward = np.asarray(state.reward)
+        assert done.all()
+        assert ((reward >= -1) & (reward <= 1)).all()
+
+
+class TestRolloutEngine:
+    @pytest.fixture(scope="class")
+    def setup(self):
+        from repro.configs.base import get_smoke_config
+        from repro.models.registry import build_model
+        from repro.rl.rollout import RolloutEngine
+        cfg = get_smoke_config("qwen2-0.5b")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        env = make_env("tictactoe")
+        eng = RolloutEngine(model, env, max_turns=2, max_turn_tokens=4,
+                            max_context=64)
+        return eng, params
+
+    def test_rollout_experience_invariants(self, setup, rng):
+        eng, params = setup
+        exp, stats = eng.run(params, rng, 4)
+        assert isinstance(exp, ExperienceBatch)
+        assert exp.tokens.shape == (4, 64)
+        gen = np.asarray(exp.gen_mask)
+        lp = np.asarray(exp.logprobs)
+        # logprobs only where generated, and always <= 0
+        assert (lp[~gen] == 0).all()
+        assert (lp[gen] <= 1e-6).all()
+        ctx = np.asarray(exp.context_len)
+        assert (ctx <= 64).all() and (ctx > 0).all()
+        assert stats.mean_context_len == pytest.approx(ctx.mean())
+
+    def test_rollout_is_reproducible(self, setup, rng):
+        eng, params = setup
+        e1, _ = eng.run(params, rng, 3)
+        e2, _ = eng.run(params, rng, 3)
+        np.testing.assert_array_equal(np.asarray(e1.tokens),
+                                      np.asarray(e2.tokens))
+
+
+def test_experience_specs_match_zeros():
+    from repro.rl.experience import experience_specs
+    z = zeros_like_experience(4, 32)
+    specs = experience_specs(4, 32)
+    for a, s in zip(z, specs):
+        assert a.shape == s.shape and a.dtype == s.dtype
