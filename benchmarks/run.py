@@ -9,6 +9,7 @@
 | Fig. 3 TP4->TP8 speedup + OOM     | bench_parallelism |
 | Fig. 4 dispatch latency           | bench_dispatch |
 | §Roofline table (from dry-run)    | bench_roofline |
+| Fig. 2 ① rollout engine tokens/s  | bench_rollout |
 
 Each bench prints its own CSV; this driver wraps them with timing rows
 ``name,us_per_call,derived``.
@@ -30,7 +31,7 @@ def main(argv=None):
 
     from benchmarks import (bench_context_growth, bench_dispatch,
                             bench_intermediate_sizes, bench_parallelism,
-                            bench_roofline)
+                            bench_roofline, bench_rollout)
 
     benches = [
         ("tab1_intermediate_sizes", bench_intermediate_sizes.main, False),
@@ -38,6 +39,7 @@ def main(argv=None):
         ("fig3_parallelism_speedup", bench_parallelism.main, True),
         ("fig4_dispatch_latency", bench_dispatch.main, False),
         ("roofline_table", bench_roofline.main, False),
+        ("rollout_engine_tokens_per_s", bench_rollout.main, True),
     ]
 
     summary = []

@@ -46,6 +46,9 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--turn-tokens", type=int, default=1,
                     help=">1 adds free-form reasoning tokens per turn")
+    ap.add_argument("--rollout-backend", default="python",
+                    choices=["python", "compiled"],
+                    help="compiled = in-graph slot-based rollout engine")
     args = ap.parse_args()
 
     cfg = get_smoke_config("qwen2-0.5b")
@@ -59,7 +62,8 @@ def main():
         optimizer=adamw(3e-3, weight_decay=0.0),
         batch_size=args.batch, max_turns=5,
         max_turn_tokens=args.turn_tokens,
-        max_context=160, kl_coef=0.02, advantage="reinforce", seed=0)
+        max_context=160, kl_coef=0.02, advantage="reinforce",
+        rollout_backend=args.rollout_backend, seed=0)
     params, opt_state, ref_params = trainer.init_state()
 
     window = []

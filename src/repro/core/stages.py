@@ -29,6 +29,7 @@ from repro.core.parallelism_selector import ParallelismSelector
 from repro.core.train_step import make_ref_logprob_step, make_rl_train_step
 from repro.optim.adamw import Optimizer, adamw
 from repro.rl.algo import reinforce_advantages, group_relative_advantages
+from repro.rl.engine import CompiledRolloutEngine
 from repro.rl.experience import ExperienceBatch
 from repro.rl.rollout import RolloutEngine, RolloutStats
 
@@ -66,6 +67,8 @@ class EarlTrainer:
     advantage: str = "reinforce"            # "reinforce" | "group"
     group_size: int = 4
     temperature: float = 1.0
+    rollout_backend: str = "python"         # "python" | "compiled"
+    rollout_episodes: Optional[int] = None  # compiled: episodes per rollout
     seed: int = 0
 
     history: List[StepRecord] = field(default_factory=list)
@@ -73,10 +76,26 @@ class EarlTrainer:
     def __post_init__(self):
         self.optimizer = self.optimizer or adamw(3e-4, weight_decay=0.0)
         self.dispatcher = self.dispatcher or DataDispatcher()
-        self.rollout = RolloutEngine(
-            self.model, self.env, max_turns=self.max_turns,
-            max_turn_tokens=self.max_turn_tokens,
-            max_context=self.max_context, temperature=self.temperature)
+        kw = dict(max_turns=self.max_turns,
+                  max_turn_tokens=self.max_turn_tokens,
+                  max_context=self.max_context, temperature=self.temperature)
+        if self.rollout_backend == "compiled":
+            # generation programs compile per MeshConfig; start on the
+            # selector's current config when it is already profiled
+            mesh_cfg = (self.selector.current
+                        if self.selector is not None
+                        and self.selector.policy is not None else None)
+            self.rollout = CompiledRolloutEngine(
+                self.model, self.env, mesh_config=mesh_cfg, **kw)
+        elif self.rollout_backend == "python":
+            if self.rollout_episodes is not None:
+                raise ValueError(
+                    "rollout_episodes requires rollout_backend='compiled' "
+                    "(the python reference engine has no slot refill)")
+            self.rollout = RolloutEngine(self.model, self.env, **kw)
+        else:
+            raise ValueError(
+                f"unknown rollout_backend {self.rollout_backend!r}")
         self._ref_step = jax.jit(make_ref_logprob_step(self.model))
         self._train_step = jax.jit(make_rl_train_step(
             self.model, self.optimizer, clip_eps=self.clip_eps,
@@ -108,10 +127,20 @@ class EarlTrainer:
             if sw is not None:
                 switch = {"from": sw[0].name, "to": sw[1].name,
                           "ema_context": self.selector.ema_context}
+            # compiled engine: keep the generation program bound to the
+            # selector's current mesh. Checking every step (not just on a
+            # switch event) also covers selectors profiled *after* trainer
+            # construction; the compile cache is keyed by MeshConfig, so
+            # revisited configs reuse their program.
+            if (hasattr(self.rollout, "bind_mesh")
+                    and self.rollout.mesh_config != self.selector.current):
+                self.rollout.bind_mesh(self.selector.current)
 
-        # ① Rollout
+        # ① Rollout (both engines share the run signature; n_episodes >
+        # batch_size engages the compiled engine's slot refill)
         exp, stats = self.rollout.run(params, self._next_rng(),
-                                      self.batch_size)
+                                      self.batch_size,
+                                      n_episodes=self.rollout_episodes)
 
         # feed the monitor (the paper's "averaged context length")
         if self.selector is not None:
@@ -128,11 +157,23 @@ class EarlTrainer:
             adv = reinforce_advantages(exp.rewards)
         exp = exp.with_(advantages=adv)
 
-        # ③④⑤ Dispatch to the Update layout
+        # ③④⑤ Dispatch to the Update layout. The compiled engine reports
+        # the true device layout of the harvested batch, so the movement
+        # plan starts from real src_shardings instead of inferring them.
         dispatch_row = None
         if dst_shardings is not None:
+            src_shardings = getattr(self.rollout, "experience_shardings",
+                                    None)
+            if src_shardings is not None:
+                # ExpPrep replaced these leaves after the engine recorded
+                # the rollout layout — refresh them so the movement plan
+                # describes the batch actually being dispatched
+                src_shardings = src_shardings._replace(
+                    ref_logprobs=exp.ref_logprobs.sharding,
+                    advantages=exp.advantages.sharding)
             exp, rep = self.dispatcher.dispatch(
-                exp, dst_shardings, strategy=self.dispatch_strategy)
+                exp, dst_shardings, strategy=self.dispatch_strategy,
+                src_shardings=src_shardings)
             dispatch_row = rep.row()
 
         # Model Update

@@ -30,9 +30,17 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description="EARL agentic RL training")
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--env", default="tictactoe",
-                    choices=["tictactoe", "connect_four"])
+                    choices=["tictactoe", "connect_four", "bandit"])
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--rollout-backend", default="python",
+                    choices=["python", "compiled"],
+                    help="python = per-token reference loop; compiled = "
+                         "in-graph slot-based engine (one XLA program per "
+                         "turn, continuous batching)")
+    ap.add_argument("--rollout-episodes", type=int, default=None,
+                    help="compiled backend: episodes per rollout (> batch "
+                         "keeps slots full via in-graph refill)")
     ap.add_argument("--max-turns", type=int, default=3)
     ap.add_argument("--max-turn-tokens", type=int, default=6)
     ap.add_argument("--max-context", type=int, default=160)
@@ -49,6 +57,12 @@ def main(argv=None):
                     help="use the reduced smoke config (CPU-sized)")
     args = ap.parse_args(argv)
 
+    if args.rollout_episodes is not None and args.rollout_backend != \
+            "compiled":
+        print("warning: --rollout-episodes only applies to the compiled "
+              "backend (slot refill); ignoring it", file=sys.stderr)
+        args.rollout_episodes = None
+
     # CPU containers always use the smoke config; the full config is for
     # real accelerators (it would not fit host memory here).
     cfg = get_smoke_config(args.arch)
@@ -62,7 +76,8 @@ def main(argv=None):
         batch_size=args.batch, max_turns=args.max_turns,
         max_turn_tokens=args.max_turn_tokens, max_context=args.max_context,
         kl_coef=args.kl_coef, clip_eps=args.clip_eps,
-        advantage=args.advantage, seed=args.seed)
+        advantage=args.advantage, rollout_backend=args.rollout_backend,
+        rollout_episodes=args.rollout_episodes, seed=args.seed)
 
     params, opt_state, ref_params = trainer.init_state()
     log_path = Path(args.log)

@@ -33,6 +33,7 @@ class Model:
     _prefill: Callable
     _decode_step: Callable
     has_aux: bool = False
+    _decode_scan_body: Optional[Callable] = None
 
     # -- params ------------------------------------------------------------
     def init(self, rng, dtype=jnp.bfloat16):
@@ -63,6 +64,20 @@ class Model:
                     attn_impl="xla", advance=None):
         return self._decode_step(self.cfg, params, token, cache, extra=extra,
                                  attn_impl=attn_impl, advance=advance)
+
+    def decode_scan_body(self, params, *, extra=None, attn_impl="xla"):
+        """``lax.scan`` body over decode steps for in-graph generation:
+        ``body((logits, cache), (token, advance)) -> ((logits, cache),
+        None)``. Families with a native implementation (dense) use it;
+        everything else wraps ``decode_step`` with the same
+        ``transformer.scan_body_over`` merge semantics."""
+        if self._decode_scan_body is not None:
+            return self._decode_scan_body(self.cfg, params, extra=extra,
+                                          attn_impl=attn_impl)
+        return transformer.scan_body_over(
+            lambda token, advance, cache: self.decode_step(
+                params, token, cache, extra=extra, attn_impl=attn_impl,
+                advance=advance))
 
     # -- stubbed modality inputs --------------------------------------------
     def input_extras(self, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
@@ -102,9 +117,15 @@ _FAMILIES = {
 }
 
 
+# families with a native scan-ready decode body (others use the generic
+# Model.decode_scan_body wrapper over decode_step)
+_SCAN_BODIES = {"dense": transformer.decode_scan_body}
+
+
 def build_model(cfg: ModelConfig) -> Model:
     if cfg.family not in _FAMILIES:
         raise ValueError(f"unknown family {cfg.family!r}")
     defs_fn, fwd, ic, pf, ds, has_aux = _FAMILIES[cfg.family]
     return Model(cfg=cfg, defs=defs_fn(cfg), _forward=fwd, _init_cache=ic,
-                 _prefill=pf, _decode_step=ds, has_aux=has_aux)
+                 _prefill=pf, _decode_step=ds, has_aux=has_aux,
+                 _decode_scan_body=_SCAN_BODIES.get(cfg.family))

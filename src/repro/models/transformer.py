@@ -156,3 +156,38 @@ def decode_step(cfg: ModelConfig, params, token, cache: DecodeCache, *,
     head = params.get("lm_head", params["embedding"])
     logits = L.unembed(head, x)[:, 0]
     return logits, DecodeCache(kv=new_kv, pos=pos + adv.astype(jnp.int32))
+
+
+def scan_body_over(step_fn):
+    """Wrap a decode-step callable ``(token, advance, cache) -> (logits,
+    cache)`` into a ``lax.scan`` body ``((logits, cache), (token,
+    advance)) -> ((logits, cache), None)``.
+
+    The single source of the advance-merge semantics used by every
+    family's in-graph generation (``Model.decode_scan_body``): rows with
+    ``advance=False`` neither write the cache (``decode_step`` handles
+    that) nor update their logits (the ``where`` here), so a whole
+    generation turn lowers as one scanned XLA loop instead of
+    ``max_turn_tokens`` dispatches.
+    """
+
+    def body(carry, x):
+        logits, cache = carry
+        token, advance = x
+        new_logits, cache = step_fn(token, advance, cache)
+        logits = jnp.where(advance[:, None], new_logits, logits)
+        return (logits, cache), None
+
+    return body
+
+
+def decode_scan_body(cfg: ModelConfig, params, *, extra=None,
+                     attn_impl: str = "xla"):
+    """Dense-family ``lax.scan`` body over decode steps (compiled
+    rollout): ``scan_body_over`` bound directly to this module's
+    ``decode_step`` (no registry indirection inside the scan)."""
+    del extra
+    return scan_body_over(
+        lambda token, advance, cache: decode_step(
+            cfg, params, token, cache, attn_impl=attn_impl,
+            advance=advance))

@@ -7,3 +7,5 @@ from repro.rl.algo import (
     policy_gradient_loss,
     token_logprobs,
 )
+from repro.rl.engine import ACTION_BASE, CompiledRolloutEngine, RolloutStats
+from repro.rl.rollout import RolloutEngine

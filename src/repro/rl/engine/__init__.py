@@ -1,0 +1,38 @@
+"""Rollout engines — the paper's Rollout stage (Fig. 2 ①), two ways.
+
+The Rollout stage dominates agentic-RL wall-clock (paper Tab. 1), and
+EARL's two components assume an engine that (a) can be re-configured per
+``MeshConfig`` when the Parallelism Selector switches at hook ① and
+(b) hands sharded experience to the Data Dispatcher (③④⑤). This package
+provides both the reference and the production-shaped implementation:
+
+  - ``rl/rollout.py`` (``RolloutEngine``): the per-token python loop. One
+    host sync per decoded token, unshardable, but trivially debuggable —
+    the semantic reference the parity tests pin the compiled engine to.
+
+  - ``engine/compiled.py`` (``CompiledRolloutEngine``): the in-graph
+    engine. One compiled *macro-step* per turn: a ``lax.scan`` over decode
+    steps (sample → buffer write → KV advance, action-token detection via
+    ``jnp`` masks), the env transition, observation teacher-forcing, and
+    slot bookkeeping — all inside a single XLA program, so the host syncs
+    once per *turn* instead of once per *token*. Generation programs are
+    compiled per ``MeshConfig`` (cache keyed by mesh) so selector switches
+    at hook ① re-bind the engine rather than re-trace it, and the returned
+    ``ExperienceBatch`` carries the mesh shardings the Data Dispatcher
+    needs as real ``src_shardings``.
+
+  - ``engine/slots.py``: slot-based continuous batching. The device batch
+    is a pool of B *slots*; a finished episode is harvested into an
+    N-episode store and a fresh episode is reset into its slot in-graph
+    (``env.reset_rows``), so the batch stays full instead of draining —
+    the serving-style batching of ``examples/serve_batched.py`` promoted
+    into training, and the single biggest utilization lever the paper's
+    Fig. 1/Tab. 1 analysis points at.
+
+  - ``engine/common.py``: the action protocol, sampling, rng derivation
+    and stats shared by both engines.
+"""
+from repro.rl.engine.common import ACTION_BASE, RolloutStats
+from repro.rl.engine.compiled import CompiledRolloutEngine
+
+__all__ = ["ACTION_BASE", "RolloutStats", "CompiledRolloutEngine"]

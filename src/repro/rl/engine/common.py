@@ -1,0 +1,136 @@
+"""Shared action-protocol / sampling / stats substrate for both rollout
+engines (the python-loop reference in ``rl/rollout.py`` and the compiled
+slot engine in ``rl/engine/compiled.py``).
+
+Everything here is deliberately engine-agnostic:
+
+  - **Action protocol**: token ids ``[ACTION_BASE, ACTION_BASE + n_actions)``
+    are action tokens; anything else is "reasoning". A row that exhausts its
+    per-turn token budget without emitting an action token falls back to
+    ``last_token % n_actions`` (``fallback_actions``).
+  - **Sampling**: ``sample_tokens`` — temperature sampling, or greedy argmax
+    when ``temperature <= 0`` (the mode the engine-parity tests compare
+    under, since it is rng-free).
+  - **RNG derivation**: both engines derive their per-turn / per-token /
+    per-env-step keys with ``fold_in`` from a common base instead of
+    splitting sequentially, so a python-loop turn and a compiled macro-step
+    at the same index consume *identical* randomness — the property the
+    greedy-parity test relies on for matching opponent moves.
+  - **Stats**: ``RolloutStats`` plus the slot-engine episode accounting
+    (episodes started == episodes returned is a tested invariant).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl.algo import token_logprobs
+
+ACTION_BASE = 32
+
+
+@dataclass
+class RolloutStats:
+    turn_lengths: np.ndarray        # (B, max_turns) generated tokens / turn
+    context_lengths: np.ndarray     # (B,) final episode context length
+    n_turns: np.ndarray             # (B,)
+    truncated: np.ndarray           # (B,) bool
+    mean_turn_len: float = 0.0
+    mean_context_len: float = 0.0
+    mean_return: float = 0.0
+    episodes_started: int = 0       # slot engine: episodes reset into slots
+    episodes_returned: int = 0      # slot engine: episodes harvested
+
+
+# ---------------------------------------------------------------------------
+# RNG derivation (shared stream shape across engines)
+# ---------------------------------------------------------------------------
+
+def turn_rng(base, turn: int):
+    """Key for one turn (python engine) / macro-step (compiled engine)."""
+    return jax.random.fold_in(base, turn)
+
+
+def reset_rng(trng):
+    """Key for slot-refill env resets within a turn."""
+    return jax.random.fold_in(trng, 0)
+
+
+def env_rng(trng):
+    """Key for the env transition (opponent move noise) within a turn."""
+    return jax.random.fold_in(trng, 1)
+
+
+def sample_rng(trng, t: int):
+    """Key for the t-th sampled token within a turn."""
+    return jax.random.fold_in(trng, 2 + t)
+
+
+# ---------------------------------------------------------------------------
+# Action protocol
+# ---------------------------------------------------------------------------
+
+def action_mask(tokens, n_actions: int):
+    """(...,) int tokens -> bool mask of action-protocol tokens."""
+    t = jnp.asarray(tokens)
+    return (t >= ACTION_BASE) & (t < ACTION_BASE + n_actions)
+
+
+def fallback_actions(actions, last_tok, active, acted, n_actions: int):
+    """Resolve actions for rows that never emitted an action token.
+
+    A row is *never-acted* iff it was active this turn and did not emit an
+    action token (``active & ~acted`` — ``acted`` starts as ``~active`` so
+    waiting rows are excluded by construction). Those rows fall back to
+    ``last_token % n_actions``; every other row keeps its action.
+    """
+    actions = jnp.asarray(actions)
+    never = jnp.asarray(active) & ~jnp.asarray(acted)
+    fb = jnp.mod(jnp.asarray(last_tok), n_actions).astype(actions.dtype)
+    return jnp.where(never, fb, actions)
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def sample_tokens(rng, logits, temperature: float):
+    """Sample next tokens from (B, V) logits. Returns (tokens, logprobs).
+
+    ``temperature <= 0`` means greedy argmax with log-probs taken from the
+    untempered distribution (rng unused) — the deterministic mode both
+    engines share for trajectory-parity testing.
+    """
+    lg = jnp.asarray(logits).astype(jnp.float32)
+    if temperature <= 0.0:
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    else:
+        lg = lg / temperature
+        tok = jax.random.categorical(rng, lg, axis=-1).astype(jnp.int32)
+    lp = token_logprobs(lg[:, None, :], tok[:, None])[:, 0]
+    return tok, lp
+
+
+# ---------------------------------------------------------------------------
+# Stats assembly
+# ---------------------------------------------------------------------------
+
+def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
+              episodes_started: int, episodes_returned: int) -> RolloutStats:
+    turn_lengths = np.asarray(turn_lengths)
+    context_lengths = np.asarray(context_lengths)
+    tl = turn_lengths[turn_lengths > 0]
+    return RolloutStats(
+        turn_lengths=turn_lengths,
+        context_lengths=context_lengths,
+        n_turns=np.asarray(n_turns),
+        truncated=np.asarray(truncated),
+        mean_turn_len=float(tl.mean()) if tl.size else 0.0,
+        mean_context_len=float(context_lengths.mean()),
+        mean_return=float(np.asarray(rewards).mean()),
+        episodes_started=int(episodes_started),
+        episodes_returned=int(episodes_returned),
+    )

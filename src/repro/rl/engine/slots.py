@@ -1,0 +1,124 @@
+"""Slot-based continuous batching for the compiled rollout engine.
+
+The device batch is a pool of ``B`` *slots*. Each live slot runs one
+episode; when an episode finishes (env terminal, truncation, or turn
+budget) it is *harvested* into a fixed-size ``EpisodeStore`` of ``N``
+episodes and — if episodes remain to launch — a fresh episode is *reset
+into the freed slot in-graph*, so the device batch stays full instead of
+draining as episodes finish (the serving-style continuous batching of
+``examples/serve_batched.py``, promoted into training).
+
+Everything here is pure ``jnp`` and runs inside the compiled macro-step:
+
+  - ``harvest``: scatter finished slot rows into the store at their
+    episode id. Non-finished rows target row ``N`` (out of bounds) and are
+    dropped by the scatter (``mode="drop"``) — no host round-trip, no
+    dynamic shapes.
+  - ``refill_plan``: assign the next unlaunched episode ids to freed slots
+    via a cumulative count, capped at ``N``.
+
+Episode accounting (started == returned) is a tested invariant.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EpisodeStore(NamedTuple):
+    """Harvested-episode output buffers, indexed by episode id (N rows)."""
+    tokens: jax.Array          # (N, T) int32
+    gen_mask: jax.Array        # (N, T) bool
+    logprobs: jax.Array        # (N, T) f32
+    rewards: jax.Array         # (N,)   f32 (0 for truncated episodes)
+    context_len: jax.Array     # (N,)   int32
+    truncated: jax.Array       # (N,)   bool
+    n_turns: jax.Array         # (N,)   int32
+    turn_lengths: jax.Array    # (N, max_turns) int32
+
+
+class SlotCarry(NamedTuple):
+    """Full device-side state threaded through compiled macro-steps.
+
+    Invariant between macro-steps: every live slot's observation is
+    already fed (its ``logits`` are the next-token distribution), so a
+    macro-step starts generating immediately — fresh episodes get their
+    observation fed by the *combined* end-of-step feed scan (continuing
+    rows' env observation and refilled rows' reset observation share one
+    scan over ``obs_len`` decode steps).
+    """
+    cache: Any                 # model decode cache (exposes .pos (B,))
+    logits: jax.Array          # (B, V) last decode logits per slot
+    env_state: Any             # env state pytree, batch-B leaves
+    tokens: jax.Array          # (B, T) int32 episode context buffer
+    gen_mask: jax.Array        # (B, T) bool
+    logprobs: jax.Array        # (B, T) f32
+    pos: jax.Array             # (B,) int32 per-row write pointer
+    live: jax.Array            # (B,) bool — slot holds a running episode
+    truncated: jax.Array       # (B,) bool — live episode hit the ctx limit
+    n_turns: jax.Array         # (B,) int32
+    turn_lengths: jax.Array    # (B, max_turns) int32
+    episode: jax.Array         # (B,) int32 episode id in [0, N); N = idle
+    launched: jax.Array        # () int32 — episodes started (reset into slots)
+    returned: jax.Array        # () int32 — episodes harvested
+    store: EpisodeStore
+
+
+def init_store(n_episodes: int, max_context: int,
+               max_turns: int) -> EpisodeStore:
+    N, T = n_episodes, max_context
+    return EpisodeStore(
+        tokens=jnp.zeros((N, T), jnp.int32),
+        gen_mask=jnp.zeros((N, T), bool),
+        logprobs=jnp.zeros((N, T), jnp.float32),
+        rewards=jnp.zeros((N,), jnp.float32),
+        context_len=jnp.zeros((N,), jnp.int32),
+        truncated=jnp.zeros((N,), bool),
+        n_turns=jnp.zeros((N,), jnp.int32),
+        turn_lengths=jnp.zeros((N, max_turns), jnp.int32),
+    )
+
+
+def harvest(store: EpisodeStore, *, finished, episode, tokens, gen_mask,
+            logprobs, rewards, pos, truncated, n_turns,
+            turn_lengths) -> EpisodeStore:
+    """Scatter finished slot rows into the store at their episode id.
+
+    Rows with ``finished=False`` are pointed at row ``N`` and dropped by
+    the out-of-bounds scatter mode, so the write is a single dense
+    (B -> N) scatter with no host sync.
+    """
+    N = store.tokens.shape[0]
+    idx = jnp.where(finished, episode, N)
+
+    def put(buf, row):
+        return buf.at[idx].set(row, mode="drop")
+
+    return EpisodeStore(
+        tokens=put(store.tokens, tokens),
+        gen_mask=put(store.gen_mask, gen_mask),
+        logprobs=put(store.logprobs, logprobs),
+        rewards=put(store.rewards, rewards),
+        context_len=put(store.context_len, pos),
+        truncated=put(store.truncated, truncated),
+        n_turns=put(store.n_turns, n_turns),
+        turn_lengths=put(store.turn_lengths, turn_lengths),
+    )
+
+
+def refill_plan(finished, launched, n_episodes: int):
+    """Assign fresh episode ids to freed slots.
+
+    Returns (refill_mask, new_ids, launched') where ``refill_mask`` marks
+    slots that receive a new episode, ``new_ids`` are their episode ids
+    (0 where unused), and ``launched'`` is the updated launch counter.
+    Finished slots beyond the remaining-episode budget go idle.
+    """
+    finished = jnp.asarray(finished)
+    order = jnp.cumsum(finished.astype(jnp.int32)) - 1      # rank among freed
+    new_ids = launched + order
+    refill = finished & (new_ids < n_episodes)
+    launched = launched + jnp.sum(refill.astype(jnp.int32))
+    return refill, jnp.where(refill, new_ids, 0), launched

@@ -1,7 +1,9 @@
-from repro.rl.envs.tictactoe import TicTacToe
+from repro.rl.envs.bandit import MultiArmedBandit
 from repro.rl.envs.connect_four import ConnectFour
+from repro.rl.envs.tictactoe import TicTacToe
 
-ENVS = {"tictactoe": TicTacToe, "connect_four": ConnectFour}
+ENVS = {"tictactoe": TicTacToe, "connect_four": ConnectFour,
+        "bandit": MultiArmedBandit}
 
 
 def make_env(name: str, **kw):

@@ -11,6 +11,12 @@ control-token region at the bottom of the model's vocabulary; the rollout
 engine renders observations with ``encode_obs`` and decodes the agent's
 action from the last generated token of the turn (``action = token %
 n_actions``). Rewards: win=+1, draw=0, loss=-1, illegal move=-1 (terminal).
+
+Compiled-engine protocol: an env declares ``jit_safe = True`` when its
+``reset`` / ``step`` / ``encode_obs`` are pure ``jnp`` (traceable inside
+``jax.jit``), and provides ``reset_rows(rng, state, mask)`` — a pure
+row-wise reset used for in-graph slot refill (``default_reset_rows``
+below covers any env with batch-leading state leaves).
 """
 from __future__ import annotations
 
@@ -34,3 +40,21 @@ class StepResult(NamedTuple):
     reward: jax.Array        # (B,) float32 — nonzero only on terminal step
     done: jax.Array          # (B,) bool
     obs_tokens: jax.Array    # (B, obs_len) int32 — next observation
+
+
+def default_reset_rows(env, rng, state, mask):
+    """Pure slot-refill: rows where ``mask`` get a fresh episode state.
+
+    Used by the compiled rollout engine to reset finished slots *inside*
+    the generation graph (continuous batching): a full fresh batch state is
+    built with ``env.reset`` and blended row-wise into the existing state.
+    Works for any env whose state leaves carry a leading batch dimension.
+    """
+    mask = jnp.asarray(mask)
+    fresh = env.reset(rng, mask.shape[0])
+
+    def mix(f, s):
+        m = mask.reshape(mask.shape + (1,) * (s.ndim - 1))
+        return jnp.where(m, f, s)
+
+    return jax.tree.map(mix, fresh, state)

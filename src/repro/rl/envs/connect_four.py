@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.rl.envs.base import (StepResult, TOK_BOS, TOK_DRAW, TOK_ILLEGAL,
-                                TOK_LOSS, TOK_OBS_BASE, TOK_TURN, TOK_WIN)
+                                TOK_LOSS, TOK_OBS_BASE, TOK_TURN, TOK_WIN,
+                                default_reset_rows)
 
 ROWS, COLS = 6, 7
 
@@ -53,6 +54,7 @@ def _drop(board, col, piece, active):
 class ConnectFour:
     n_actions = COLS
     obs_len = 3 + ROWS * COLS    # BOS + 42 cells + result + turn marker - 42..
+    jit_safe = True              # pure jnp: usable inside the compiled engine
 
     def __init__(self):
         self.obs_len = 3 + ROWS * COLS
@@ -64,6 +66,9 @@ class ConnectFour:
             done=jnp.zeros((batch,), bool),
             reward=jnp.zeros((batch,), jnp.float32),
         )
+
+    def reset_rows(self, rng, state: C4State, mask) -> C4State:
+        return default_reset_rows(self, rng, state, mask)
 
     def legal_mask(self, state: C4State):
         return state.board[:, 0, :] == 0                 # top row empty

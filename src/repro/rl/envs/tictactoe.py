@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.rl.envs.base import (StepResult, TOK_BOS, TOK_DRAW, TOK_ILLEGAL,
-                                TOK_LOSS, TOK_OBS_BASE, TOK_TURN, TOK_WIN)
+                                TOK_LOSS, TOK_OBS_BASE, TOK_TURN, TOK_WIN,
+                                default_reset_rows)
 
 _LINES = jnp.array([
     [0, 1, 2], [3, 4, 5], [6, 7, 8],      # rows
@@ -25,6 +26,7 @@ class TTTState(NamedTuple):
 class TicTacToe:
     n_actions = 9
     obs_len = 12         # BOS + 9 cells + result/turn + turn marker
+    jit_safe = True      # pure jnp: usable inside the compiled engine
 
     def reset(self, rng, batch: int) -> TTTState:
         del rng
@@ -33,6 +35,9 @@ class TicTacToe:
             done=jnp.zeros((batch,), bool),
             reward=jnp.zeros((batch,), jnp.float32),
         )
+
+    def reset_rows(self, rng, state: TTTState, mask) -> TTTState:
+        return default_reset_rows(self, rng, state, mask)
 
     @staticmethod
     def _wins(board, piece):

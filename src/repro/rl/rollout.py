@@ -1,48 +1,34 @@
 """Multi-turn agentic rollout engine (the paper's Rollout stage, Fig. 2 ①).
 
-Per turn: the policy decodes tokens one at a time (temperature sampling)
-until it emits an *action token* (or hits the per-turn cap); the action is
-applied to the vectorized environment; the environment's observation tokens
-are then teacher-forced into the context, and the next turn begins. The
-loop ends when every episode is done or the context limit would be exceeded
-(a *truncation* — the failure mode of paper Fig. 1, which EARL's dynamic
-parallelism exists to push out).
+Per turn: the policy decodes tokens one at a time (temperature sampling,
+or greedy argmax when ``temperature <= 0``) until it emits an *action
+token* (or hits the per-turn cap); the action is applied to the vectorized
+environment; the environment's observation tokens are then teacher-forced
+into the context, and the next turn begins. The loop ends when every
+episode is done or the context limit would be exceeded (a *truncation* —
+the failure mode of paper Fig. 1, which EARL's dynamic parallelism exists
+to push out).
 
-Action protocol: token ids [ACTION_BASE, ACTION_BASE + n_actions) are action
-tokens; any other sampled token is "reasoning". The fallback when the cap is
-reached is ``last_token % n_actions``.
-
-Decoding uses the model's jitted ``decode_step`` + KV cache; the per-token
-python loop is the CPU-friendly reference path (a ``lax.scan`` generation
-body is what the compiled TPU rollout uses — see launch/serve shapes, where
-``serve_step`` is exactly one of these decode steps).
+The action protocol, sampling, rng derivation and stats live in
+``rl/engine/common.py``, shared with the compiled slot engine
+(``rl/engine/compiled.py``). This per-token python loop is the
+CPU-friendly reference path: it host-syncs on every token, which is
+exactly the overhead the compiled engine removes; a parity test pins both
+engines to identical greedy trajectories.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.rl.algo import reinforce_advantages, token_logprobs
+from repro.rl.algo import reinforce_advantages
+from repro.rl.engine import common
+from repro.rl.engine.common import ACTION_BASE, RolloutStats  # re-exported
 from repro.rl.envs.base import TOK_PAD
 from repro.rl.experience import ExperienceBatch
-
-ACTION_BASE = 32
-
-
-@dataclass
-class RolloutStats:
-    turn_lengths: np.ndarray        # (B, max_turns) generated tokens / turn
-    context_lengths: np.ndarray     # (B,) final episode context length
-    n_turns: np.ndarray             # (B,)
-    truncated: np.ndarray           # (B,) bool
-    mean_turn_len: float = 0.0
-    mean_context_len: float = 0.0
-    mean_return: float = 0.0
 
 
 @dataclass
@@ -64,8 +50,16 @@ class RolloutEngine:
             lambda p, toks, cache: self.model.prefill(p, toks, cache))
 
     # ------------------------------------------------------------------
-    def run(self, params, rng, batch: int, *, extra=None):
-        """Roll out ``batch`` episodes. Returns (ExperienceBatch, stats)."""
+    def run(self, params, rng, batch: int, *, n_episodes=None, extra=None):
+        """Roll out ``batch`` episodes. Returns (ExperienceBatch, stats).
+
+        ``n_episodes`` exists for signature parity with the compiled
+        engine; the python loop has no slot refill, so it must equal
+        ``batch`` (or be None)."""
+        if n_episodes is not None and n_episodes != batch:
+            raise ValueError(
+                "the python reference engine has no slot refill; use "
+                "CompiledRolloutEngine for n_episodes != batch")
         env, model = self.env, self.model
         T = self.max_context
         B = batch
@@ -89,7 +83,7 @@ class RolloutEngine:
         logits_buf, cache = self._prefill(
             params, jnp.asarray(tokens[:, :olen]), cache)
         done = np.zeros(B, bool)
-        rng = jax.random.fold_in(rng, 1)
+        base_rng = jax.random.fold_in(rng, 1)
 
         def advance_rows(fed_tokens, mask):
             """Feed per-row tokens; only ``mask`` rows advance."""
@@ -104,6 +98,7 @@ class RolloutEngine:
         for turn in range(self.max_turns):
             if done.all():
                 break
+            trng = common.turn_rng(base_rng, turn)
             # rows that cannot fit another turn + observation get truncated
             room = pos + self.max_turn_tokens + olen <= T
             truncated |= (~done) & (~room)
@@ -119,10 +114,8 @@ class RolloutEngine:
                 write = ~acted
                 if not write.any():
                     break
-                rng, krng = jax.random.split(rng)
-                lg = logits_buf / max(self.temperature, 1e-4)
-                sampled = jax.random.categorical(krng, lg, axis=-1)
-                lp = token_logprobs(lg[:, None, :], sampled[:, None])[:, 0]
+                sampled, lp = common.sample_tokens(
+                    common.sample_rng(trng, t), logits_buf, self.temperature)
                 sampled_np = np.asarray(sampled, np.int32)
                 lp_np = np.asarray(lp, np.float32)
 
@@ -134,8 +127,8 @@ class RolloutEngine:
                 turn_lengths[rows, turn] += 1
                 last_tok[rows] = sampled_np[rows]
 
-                is_action = ((sampled_np >= ACTION_BASE) &
-                             (sampled_np < ACTION_BASE + env.n_actions))
+                is_action = np.asarray(
+                    common.action_mask(sampled_np, env.n_actions))
                 newly = write & is_action
                 actions[newly] = sampled_np[newly] - ACTION_BASE
                 acted |= newly
@@ -143,21 +136,23 @@ class RolloutEngine:
                 advance_rows(sampled_np, write)
 
             # fallback action for rows that never emitted an action token
-            never = active & ~(acted & active)
-            actions[never] = last_tok[never] % env.n_actions
+            actions = np.asarray(common.fallback_actions(
+                actions, last_tok, active, acted, env.n_actions), np.int32)
             n_turns[active] += 1
 
             # env transition (inactive rows absorb inside env.step)
-            rng, erng = jax.random.split(rng)
             env_actions = np.where(active, actions, 0).astype(np.int32)
             # freeze finished rows by making their action a no-op via done
-            state, res = env.step(state, jnp.asarray(env_actions), erng)
+            state, res = env.step(state, jnp.asarray(env_actions),
+                                  common.env_rng(trng))
             res_obs = np.asarray(res.obs_tokens)
             new_done = np.asarray(res.done)
 
-            # teacher-force the observation for still-running rows
+            # teacher-force the observation for still-running rows; rows
+            # out of turn budget skip it (no generation can follow — the
+            # trailing obs would only burn context and decode steps)
             feed = active & ~new_done
-            if feed.any():
+            if turn + 1 < self.max_turns and feed.any():
                 for j in range(olen):
                     col_tok = np.where(feed, res_obs[:, j],
                                        TOK_PAD).astype(np.int32)
@@ -183,14 +178,7 @@ class RolloutEngine:
             context_len=jnp.asarray(pos),
             truncated=jnp.asarray(truncated),
         )
-        tl = turn_lengths[turn_lengths > 0]
-        stats = RolloutStats(
-            turn_lengths=turn_lengths,
-            context_lengths=pos.copy(),
-            n_turns=n_turns,
-            truncated=truncated,
-            mean_turn_len=float(tl.mean()) if tl.size else 0.0,
-            mean_context_len=float(pos.mean()),
-            mean_return=float(rewards.mean()),
-        )
+        stats = common.summarize(
+            turn_lengths, pos.copy(), n_turns, truncated, rewards,
+            episodes_started=B, episodes_returned=B)
         return exp, stats

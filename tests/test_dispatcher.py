@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.data_dispatcher import (DataDispatcher, centralized_plan,
                                         estimate_latency, movement_plan)
@@ -161,19 +160,25 @@ class TestMovementPlanProperties:
 
 
 class TestLatencyModel:
-    @given(st.integers(min_value=1, max_value=2**30),
-           st.integers(min_value=1, max_value=64))
-    @settings(max_examples=100, deadline=None)
-    def test_latency_scales_linearly(self, nbytes, fan):
-        from repro.core.data_dispatcher import MovementPlan
-        plan = MovementPlan(nbytes * fan, {0: nbytes * fan},
-                            {i: nbytes for i in range(1, fan + 1)})
-        t_serial = estimate_latency(plan, bandwidth=1e9,
-                                    links_parallel=False)
-        t_parallel = estimate_latency(plan, bandwidth=1e9)
-        assert t_serial == pytest.approx(plan.total_bytes / 1e9)
-        assert t_parallel == pytest.approx(plan.bottleneck_bytes / 1e9)
-        assert t_parallel <= t_serial + 1e-12
+    def test_latency_scales_linearly(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=100, deadline=None)
+        @given(st.integers(min_value=1, max_value=2**30),
+               st.integers(min_value=1, max_value=64))
+        def prop(nbytes, fan):
+            from repro.core.data_dispatcher import MovementPlan
+            plan = MovementPlan(nbytes * fan, {0: nbytes * fan},
+                                {i: nbytes for i in range(1, fan + 1)})
+            t_serial = estimate_latency(plan, bandwidth=1e9,
+                                        links_parallel=False)
+            t_parallel = estimate_latency(plan, bandwidth=1e9)
+            assert t_serial == pytest.approx(plan.total_bytes / 1e9)
+            assert t_parallel == pytest.approx(plan.bottleneck_bytes / 1e9)
+            assert t_parallel <= t_serial + 1e-12
+
+        prop()
 
 
 class TestDistributedAdvantages:

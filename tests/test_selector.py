@@ -1,6 +1,9 @@
-"""Parallelism Selector unit + property tests (EARL §2, Fig. 3)."""
+"""Parallelism Selector unit + property tests (EARL §2, Fig. 3).
+
+The property-based tests require ``hypothesis`` (the optional ``[test]``
+extra); they skip cleanly when it is absent so the plain tests still run.
+"""
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.parallelism_selector import (ContextBuckets,
                                              ParallelismSelector,
@@ -44,13 +47,19 @@ class TestContextBuckets:
         assert b.bucket(1_000_000) == 4
         assert b.n_buckets == 5
 
-    @given(st.integers(min_value=0, max_value=10**9))
-    @settings(max_examples=200, deadline=None)
-    def test_bucket_is_monotone_total(self, ctx):
-        b = ContextBuckets((1024, 2048, 65536))
-        i = b.bucket(ctx)
-        assert 0 <= i < b.n_buckets
-        assert b.bucket(ctx + 1) >= i
+    def test_bucket_is_monotone_total(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=200, deadline=None)
+        @given(st.integers(min_value=0, max_value=10**9))
+        def prop(ctx):
+            b = ContextBuckets((1024, 2048, 65536))
+            i = b.bucket(ctx)
+            assert 0 <= i < b.n_buckets
+            assert b.bucket(ctx + 1) >= i
+
+        prop()
 
 
 class TestProfiling:
@@ -122,18 +131,24 @@ class TestRuntimeSwitching:
         assert sel.switch_log[0]["from"] == "tp4"
         assert sel.switch_log[0]["to"] == "tp8"
 
-    @given(st.lists(st.integers(min_value=0, max_value=10**6), min_size=1,
-                    max_size=50))
-    @settings(max_examples=50, deadline=None)
-    def test_current_config_always_feasible_for_ema(self, contexts):
+    def test_current_config_always_feasible_for_ema(self):
         """Invariant: after any observation sequence, the active config is
         the profiled best (hence feasible) for the EMA's bucket."""
-        sel = paperlike_selector(ema_alpha=0.7)
-        pol = sel.profile()
-        for c in contexts:
-            sel.observe(c)
-            sel.maybe_switch()
-            assert sel.current == pol.best(sel.ema_context)
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=50, deadline=None)
+        @given(st.lists(st.integers(min_value=0, max_value=10**6),
+                        min_size=1, max_size=50))
+        def prop(contexts):
+            sel = paperlike_selector(ema_alpha=0.7)
+            pol = sel.profile()
+            for c in contexts:
+                sel.observe(c)
+                sel.maybe_switch()
+                assert sel.current == pol.best(sel.ema_context)
+
+        prop()
 
 
 class TestMeshConfig:
