@@ -1,16 +1,34 @@
-"""Rollout engine throughput: python-loop vs compiled slot engine.
+"""Rollout engine throughput: python-loop vs compiled slot engine, and
+dense vs paged KV cache layouts under episode churn.
 
-The python-loop reference pays one host round-trip per decoded token (plus
-per-token jit dispatch); the compiled engine lowers a whole turn —
-generation scan, env transition, observation teacher-forcing, slot
-harvest/refill — into one XLA program and syncs once per turn. This bench
-measures generated tokens/s for both backends across batch sizes and turn
-budgets (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1).
+Two regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
+
+1. **Engine grid** — generated tokens/s for the python reference vs the
+   compiled engine across batch sizes and turn budgets. The python loop
+   pays one host round-trip per decoded token; the compiled engine lowers
+   a whole turn into one XLA program and syncs once per turn.
+
+2. **Churn regime** (``n_episodes >> batch``, bandit env) — single-turn
+   episodes end every macro-step, so every step exercises slot refill:
+   the worst case for cache-reset cost and the best case for the paged
+   layout. Dense refill zeroes a ``(max_context,)`` cache row per slot;
+   paged refill releases the slot's pages back to the shared pool, and
+   the pool is sized to *live* tokens (episodes never grow past
+   ``obs_len + max_turn_tokens``) instead of ``batch * max_context``.
+   The ``equal_mem_batch_ctx`` column reports the batch×context product
+   the paged pool admits inside the dense layout's KV budget.
 
     PYTHONPATH=src python -m benchmarks.bench_rollout
-        [--batches 2,8,16] [--max-turns 3] [--repeats 3]
+        [--batches 2,8] [--max-turns 3] [--repeats 3]
+        [--churn-mult 4] [--page-size 8]
 
-CSV: backend,env,batch,max_turns,episodes,gen_tokens,seconds,tokens_per_s
+CSV (grid):  backend,env,batch,max_turns,episodes,gen_tokens,seconds,
+             tokens_per_s
+CSV (churn): layout,env,batch,episodes,gen_tokens,seconds,tokens_per_s,
+             cache_kib,equal_mem_batch_ctx
+
+``main`` returns the rows as a dict so ``benchmarks/run.py`` can write
+``BENCH_rollout.json`` for cross-PR perf tracking.
 """
 from __future__ import annotations
 
@@ -31,38 +49,35 @@ def _build(arch: str, env_name: str):
     return model, params, make_env(env_name)
 
 
-def _bench_engine(engine, params, batch: int, repeats: int):
+def _bench_engine(engine, params, batch: int, repeats: int, *,
+                  n_episodes=None):
     """(total generated tokens, seconds) over ``repeats`` timed rollouts;
     one untimed warmup run absorbs compilation."""
     rng = jax.random.PRNGKey(1)
-    engine.run(params, rng, batch)                     # warmup / compile
+    engine.run(params, rng, batch, n_episodes=n_episodes)   # warmup
     tokens = 0
     t0 = time.perf_counter()
     for i in range(repeats):
-        exp, _ = engine.run(params, jax.random.fold_in(rng, i), batch)
+        exp, _ = engine.run(params, jax.random.fold_in(rng, i), batch,
+                            n_episodes=n_episodes)
         tokens += int(np.asarray(exp.gen_mask).sum())
     return tokens, time.perf_counter() - t0
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--env", default="tictactoe")
-    ap.add_argument("--batches", default="2,8")
-    ap.add_argument("--max-turns", default="3")
-    ap.add_argument("--max-turn-tokens", type=int, default=4)
-    ap.add_argument("--max-context", type=int, default=96)
-    ap.add_argument("--repeats", type=int, default=3)
-    # benchmarks.run calls main() with no argv — don't inherit its flags
-    args = ap.parse_args(argv if argv is not None else [])
+def _cache_bytes(model, batch: int, s_max: int, **layout_kw) -> int:
+    """Decode-cache footprint in bytes (abstract eval — no allocation)."""
+    abs_cache = jax.eval_shape(
+        lambda: model.init_cache(batch, s_max, **layout_kw))
+    return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(abs_cache)))
 
+
+def _grid_section(args, model, params, env):
     from repro.rl.engine import CompiledRolloutEngine
     from repro.rl.rollout import RolloutEngine
 
-    model, params, env = _build(args.arch, args.env)
     batches = [int(b) for b in args.batches.split(",")]
     turn_grid = [int(t) for t in args.max_turns.split(",")]
-
     print("# backend,env,batch,max_turns,episodes,gen_tokens,seconds,"
           "tokens_per_s")
     rows = []
@@ -75,12 +90,16 @@ def main(argv=None):
                     ("compiled", CompiledRolloutEngine(model, env, **kw))):
                 toks, secs = _bench_engine(eng, params, B, args.repeats)
                 tps = toks / max(secs, 1e-9)
-                rows.append((name, B, mt, tps))
+                rows.append(dict(backend=name, env=args.env, batch=B,
+                                 max_turns=mt, episodes=args.repeats * B,
+                                 gen_tokens=toks, seconds=round(secs, 3),
+                                 tokens_per_s=round(tps, 1)))
                 print(f"{name},{args.env},{B},{mt},{args.repeats * B},"
                       f"{toks},{secs:.3f},{tps:.1f}")
 
     # headline: the compiled engine's advantage where batching matters
-    by = {(n, B, mt): tps for n, B, mt, tps in rows}
+    by = {(r["backend"], r["batch"], r["max_turns"]): r["tokens_per_s"]
+          for r in rows}
     for (n, B, mt), tps in sorted(by.items()):
         if n != "python":
             continue
@@ -88,9 +107,86 @@ def main(argv=None):
         if ctps:
             print(f"# speedup batch={B} max_turns={mt}: "
                   f"{ctps / max(tps, 1e-9):.2f}x")
-    return 0
+    return rows
+
+
+def _churn_section(args, model, params):
+    """Dense vs paged compiled engine at maximum slot churn."""
+    from repro.models import paging
+    from repro.rl.engine import CompiledRolloutEngine
+    from repro.rl.envs import make_env
+
+    env = make_env("bandit")
+    mtt, T, ps = 2, args.max_context, args.page_size
+    peak = env.obs_len + mtt               # single-turn episode peak tokens
+    batches = [int(b) for b in args.batches.split(",")]
+    print("\n# churn regime: bandit, n_episodes = "
+          f"{args.churn_mult} x batch (every macro-step refills)")
+    print("# layout,env,batch,episodes,gen_tokens,seconds,tokens_per_s,"
+          "cache_kib,equal_mem_batch_ctx")
+    rows = []
+    for B in batches:
+        N = args.churn_mult * B
+        # paged pool sized to LIVE tokens (episodes never outgrow `peak`),
+        # not to the B * max_context capacity the dense layout must allocate
+        pool = B * paging.pages_per_slot(peak, ps)
+        layouts = {
+            "dense": dict(cache_layout="dense"),
+            "paged": dict(cache_layout="paged", page_size=ps,
+                          cache_pages=pool),
+        }
+        dense_bytes = _cache_bytes(model, B, T)
+        for name, lkw in layouts.items():
+            eng = CompiledRolloutEngine(
+                model, env, max_turns=1, max_turn_tokens=mtt,
+                max_context=T, temperature=1.0, **lkw)
+            toks, secs = _bench_engine(eng, params, B, args.repeats,
+                                       n_episodes=N)
+            tps = toks / max(secs, 1e-9)
+            cb = _cache_bytes(model, B, T, **(
+                dict(layout="paged", page_size=ps, n_pages=pool)
+                if name == "paged" else {}))
+            # batch x context product this layout admits inside the DENSE
+            # KV budget (the continuous-batching memory headline)
+            equal_mem = int(B * T * dense_bytes / max(cb, 1))
+            rows.append(dict(layout=name, env="bandit", batch=B,
+                             episodes=N, gen_tokens=toks,
+                             seconds=round(secs, 3),
+                             tokens_per_s=round(tps, 1),
+                             cache_kib=round(cb / 1024, 1),
+                             equal_mem_batch_ctx=equal_mem))
+            print(f"{name},bandit,{B},{N},{toks},{secs:.3f},{tps:.1f},"
+                  f"{cb / 1024:.1f},{equal_mem}")
+        d, p = rows[-2], rows[-1]
+        ratio = p["equal_mem_batch_ctx"] / max(d["equal_mem_batch_ctx"], 1)
+        print(f"# batch={B}: paged admits {ratio:.1f}x the batch*ctx of "
+              f"dense at equal memory ({d['cache_kib']:.0f} KiB vs "
+              f"{p['cache_kib']:.0f} KiB)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--env", default="tictactoe")
+    ap.add_argument("--batches", default="2,8")
+    ap.add_argument("--max-turns", default="3")
+    ap.add_argument("--max-turn-tokens", type=int, default=4)
+    ap.add_argument("--max-context", type=int, default=96)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--churn-mult", type=int, default=4,
+                    help="churn regime: episodes per slot (n_episodes = "
+                         "mult * batch)")
+    ap.add_argument("--page-size", type=int, default=8)
+    # benchmarks.run calls main() with no argv — don't inherit its flags
+    args = ap.parse_args(argv if argv is not None else [])
+
+    model, params, env = _build(args.arch, args.env)
+    grid = _grid_section(args, model, params, env)
+    churn = _churn_section(args, model, params)
+    return {"engine_grid": grid, "churn": churn}
 
 
 if __name__ == "__main__":
     import sys
-    sys.exit(main(sys.argv[1:]))
+    sys.exit(0 if main(sys.argv[1:]) else 1)

@@ -1,25 +1,61 @@
 """Benchmark harness — one entry per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+        [--out-dir DIR]
 
-| paper artifact | bench |
-|---|---|
-| Tab. 1 intermediate batch sizes   | bench_intermediate_sizes |
-| Fig. 1 context growth & collapse  | bench_context_growth |
-| Fig. 3 TP4->TP8 speedup + OOM     | bench_parallelism |
-| Fig. 4 dispatch latency           | bench_dispatch |
-| §Roofline table (from dry-run)    | bench_roofline |
-| Fig. 2 ① rollout engine tokens/s  | bench_rollout |
+| paper artifact | bench | json |
+|---|---|---|
+| Tab. 1 intermediate batch sizes   | bench_intermediate_sizes | BENCH_intermediate_sizes.json |
+| Fig. 1 context growth & collapse  | bench_context_growth | BENCH_context_growth.json |
+| Fig. 3 TP4->TP8 speedup + OOM     | bench_parallelism | BENCH_parallelism.json |
+| Fig. 4 dispatch latency           | bench_dispatch | BENCH_dispatch.json |
+| §Roofline table (from dry-run)    | bench_roofline | BENCH_roofline.json |
+| Fig. 2 ① rollout engine tokens/s  | bench_rollout | BENCH_rollout.json |
 
 Each bench prints its own CSV; this driver wraps them with timing rows
-``name,us_per_call,derived``.
+``name,us_per_call,derived`` AND writes a machine-readable
+``BENCH_<short>.json`` next to the CSV output (``--out-dir``, default
+CWD) so the perf trajectory is tracked across PRs. A bench whose
+``main`` returns a dict/list contributes that payload as the JSON's
+``data`` field (``bench_rollout`` returns its full row set — the
+dense-vs-paged cache comparison lands there).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import sys
 import time
 import traceback
+from pathlib import Path
+
+
+def _jsonable(o):
+    """Recursively coerce bench payloads to strict RFC-8259 JSON: numpy
+    scalars -> python, non-finite floats -> null (a literal NaN would
+    break every downstream parser doing the cross-PR diff)."""
+    if isinstance(o, dict):
+        return {str(k): _jsonable(v) for k, v in o.items()}
+    if isinstance(o, (list, tuple)):
+        return [_jsonable(v) for v in o]
+    if hasattr(o, "item") and not isinstance(o, (str, bytes)):
+        return _jsonable(o.item())          # numpy scalar
+    if isinstance(o, float) and not math.isfinite(o):
+        return None
+    if o is None or isinstance(o, (bool, int, float, str)):
+        return o
+    return repr(o)
+
+
+def _write_json(out_dir: Path, short: str, record: dict) -> None:
+    path = out_dir / f"BENCH_{short}.json"
+    try:
+        path.write_text(json.dumps(_jsonable(record), indent=1,
+                                   sort_keys=True, allow_nan=False) + "\n")
+        print(f"# wrote {path}")
+    except Exception as e:      # never fail the bench run on the sidecar
+        print(f"# WARNING: could not write {path}: {e}", file=sys.stderr)
 
 
 def main(argv=None):
@@ -27,25 +63,32 @@ def main(argv=None):
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="skip the slow compile-heavy benches")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<name>.json outputs")
     args = ap.parse_args(argv)
+    out_dir = Path(args.out_dir)
 
     from benchmarks import (bench_context_growth, bench_dispatch,
                             bench_intermediate_sizes, bench_parallelism,
                             bench_roofline, bench_rollout)
 
     benches = [
-        ("tab1_intermediate_sizes", bench_intermediate_sizes.main, False),
-        ("fig1_context_growth", bench_context_growth.main, False),
-        ("fig3_parallelism_speedup", bench_parallelism.main, True),
-        ("fig4_dispatch_latency", bench_dispatch.main, False),
-        ("roofline_table", bench_roofline.main, False),
-        ("rollout_engine_tokens_per_s", bench_rollout.main, True),
+        ("tab1_intermediate_sizes", "intermediate_sizes",
+         bench_intermediate_sizes.main, False),
+        ("fig1_context_growth", "context_growth",
+         bench_context_growth.main, False),
+        ("fig3_parallelism_speedup", "parallelism",
+         bench_parallelism.main, True),
+        ("fig4_dispatch_latency", "dispatch", bench_dispatch.main, False),
+        ("roofline_table", "roofline", bench_roofline.main, False),
+        ("rollout_engine_tokens_per_s", "rollout", bench_rollout.main,
+         True),
     ]
 
     summary = []
     failed = 0
-    for name, fn, slow in benches:
-        if args.only and args.only not in name:
+    for name, short, fn, slow in benches:
+        if args.only and args.only not in name and args.only not in short:
             continue
         if args.quick and slow:
             print(f"== {name}: skipped (--quick)")
@@ -53,13 +96,21 @@ def main(argv=None):
         print(f"\n===== {name} =====")
         t0 = time.perf_counter()
         try:
-            fn()
-            dt = (time.perf_counter() - t0) * 1e6
-            summary.append((name, dt, "ok"))
+            ret = fn()
+            dt = time.perf_counter() - t0
+            summary.append((name, dt * 1e6, "ok"))
+            data = ret if isinstance(ret, (dict, list)) else None
+            _write_json(out_dir, short, {
+                "bench": name, "status": "ok",
+                "seconds": round(dt, 3), "data": data})
         except Exception:
             traceback.print_exc()
             failed += 1
-            summary.append((name, (time.perf_counter() - t0) * 1e6, "FAIL"))
+            dt = time.perf_counter() - t0
+            summary.append((name, dt * 1e6, "FAIL"))
+            _write_json(out_dir, short, {
+                "bench": name, "status": "fail",
+                "seconds": round(dt, 3), "data": None})
 
     print("\n# name,us_per_call,derived")
     for name, us, status in summary:

@@ -69,6 +69,9 @@ class EarlTrainer:
     temperature: float = 1.0
     rollout_backend: str = "python"         # "python" | "compiled"
     rollout_episodes: Optional[int] = None  # compiled: episodes per rollout
+    cache_layout: str = "dense"             # compiled: "dense" | "paged"
+    page_size: int = 16                     # paged: tokens per KV page
+    cache_pages: Optional[int] = None       # paged: pool size (None = full)
     seed: int = 0
 
     history: List[StepRecord] = field(default_factory=list)
@@ -86,12 +89,19 @@ class EarlTrainer:
                         if self.selector is not None
                         and self.selector.policy is not None else None)
             self.rollout = CompiledRolloutEngine(
-                self.model, self.env, mesh_config=mesh_cfg, **kw)
+                self.model, self.env, mesh_config=mesh_cfg,
+                cache_layout=self.cache_layout, page_size=self.page_size,
+                cache_pages=self.cache_pages, **kw)
         elif self.rollout_backend == "python":
             if self.rollout_episodes is not None:
                 raise ValueError(
                     "rollout_episodes requires rollout_backend='compiled' "
                     "(the python reference engine has no slot refill)")
+            if self.cache_layout != "dense":
+                raise ValueError(
+                    "cache_layout='paged' requires "
+                    "rollout_backend='compiled' (the paged pool and its "
+                    "in-graph allocator live in the compiled macro-step)")
             self.rollout = RolloutEngine(self.model, self.env, **kw)
         else:
             raise ValueError(

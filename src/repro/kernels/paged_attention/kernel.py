@@ -1,0 +1,122 @@
+"""Paged decode attention (vLLM-style block tables) for TPU.
+
+Single-query attention where the KV cache is a shared *page pool*
+``(n_pages, page_size, KV, hd)`` indexed per row through a block table —
+the layout that lets the rollout engine's slot refill free pages instead
+of zeroing a dense cache row.
+
+The gather happens *in the grid*: the block table and per-row lengths
+are scalar-prefetch operands (``pltpu.PrefetchScalarGridSpec``), so the
+k/v BlockSpec index maps read ``block_table[b, p]`` to DMA exactly the
+pages a row owns — the kernel never materializes a dense per-row cache
+view (the XLA fallback in ``models/layers.py`` does, which is the
+bandwidth cost this kernel removes).
+
+Online-softmax state is carried in VMEM scratch across the page axis of
+the grid (TPU grids execute sequentially per core — same idiom as
+``kernels/decode_attention``). GQA: the ``group`` q heads sharing a kv
+head are processed together, loading each page once per group.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(bt_safe_ref, bt_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, scale, ps,
+                         n_pages_grid):
+    del bt_safe_ref                    # consumed by the BlockSpec index maps
+    group = q_ref.shape[2]
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (group, hd)
+    k_blk = k_ref[0, :, 0].astype(jnp.float32)             # (ps, hd)
+    v_blk = v_ref[0, :, 0].astype(jnp.float32)
+
+    # absolute positions held by this page of the row's block table;
+    # a partially filled last page and unmapped entries mask the same way
+    idx = p * ps + jax.lax.broadcasted_iota(jnp.int32, (ps,), 0)
+    ok = (idx < len_ref[b]) & (bt_ref[b, p] >= 0)
+
+    s = q @ k_blk.T                                        # (group, ps)
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    pr = jnp.exp(s - m_new[:, None])
+    pr = jnp.where(ok[None, :], pr, 0.0)   # masked cols contribute exactly 0
+    alpha = jnp.exp(m_prev - m_new)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pr @ v_blk
+    m_ref[...] = m_new
+    l_ref[...] = alpha * l_prev + jnp.sum(pr, axis=1)
+
+    @pl.when(p == n_pages_grid - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)                    # fully masked row
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_bkgd(q, k_pages, v_pages, block_table, lens, *,
+                                interpret=False):
+    """q: (B,KV,group,hd); k_pages,v_pages: (P,ps,KV,hd);
+    block_table: (B,NP) int32 (-1 = unmapped); lens: (B,) int32.
+    -> (B,KV,group,hd)."""
+    B, KV, group, hd = q.shape
+    P, ps = k_pages.shape[0], k_pages.shape[1]
+    NP = block_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, ps=ps,
+                               n_pages_grid=NP)
+    # unmapped entries are masked in-kernel; clamp so the index map always
+    # names a resident page for the (dead) DMA
+    bt_safe = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
+
+    def page_map(b, h, p, bt_safe, bt, lens):
+        del bt, lens
+        return (bt_safe[b, p], 0, h, 0)
+
+    def row_map(b, h, p, bt_safe, bt, lens):
+        del bt_safe, bt, lens
+        return (b, h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KV, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, hd), row_map),
+            pl.BlockSpec((1, ps, 1, hd), page_map),
+            pl.BlockSpec((1, ps, 1, hd), page_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd), row_map),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),      # running max m
+            pltpu.VMEM((group,), jnp.float32),      # running sum l
+            pltpu.VMEM((group, hd), jnp.float32),   # output accumulator
+        ],
+    )
+    # index maps see the CLAMPED table (DMA must name a resident page);
+    # the kernel masks on the RAW table (unmapped stays invalid)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, group, hd), q.dtype),
+        interpret=interpret,
+    )(bt_safe, block_table.astype(jnp.int32), lens.astype(jnp.int32),
+      q, k_pages, v_pages)

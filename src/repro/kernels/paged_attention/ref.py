@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the paged decode attention kernel.
+
+The oracle gathers the page pool through the block table into a dense
+``(B, pages_per_slot * page_size, KV, hd)`` view and runs the same masked
+GQA softmax as ``decode_attention_ref`` — which is exactly what the
+``attn_impl="xla"`` paged path in ``models/layers.py`` does, so this file
+doubles as the semantic spec for both the kernel and the XLA fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lens):
+    """q: (B,H,hd); k_pages,v_pages: (P,ps,KV,hd) shared page pool;
+    block_table: (B,NP) int32 (-1 = unmapped); lens: (B,) int32 live
+    tokens per row (row b attends to absolute positions < lens[b]).
+    Returns (B,H,hd).
+
+    Position ``s`` of row ``b`` lives at pool page ``block_table[b, s //
+    ps]``, offset ``s % ps``. Positions ≥ ``lens[b]`` are masked, so a
+    partially filled last page and unmapped trailing table entries are
+    both handled by the same predicate; unmapped entries *inside* the
+    live range are additionally masked (defensive — a well-formed table
+    maps every live page).
+    """
+    B, H, hd = q.shape
+    P, ps, KV, _ = k_pages.shape
+    NP = block_table.shape[1]
+    group = H // KV
+
+    bt_c = jnp.clip(block_table, 0, P - 1)
+    k = k_pages[bt_c].reshape(B, NP * ps, KV, hd)           # (B,S,KV,hd)
+    v = v_pages[bt_c].reshape(B, NP * ps, KV, hd)
+    s_idx = jnp.arange(NP * ps)[None, :]                    # (1,S)
+    mapped = jnp.repeat(block_table >= 0, ps, axis=1)       # (B,S)
+    valid = (s_idx < lens[:, None]) & mapped
+
+    qf = q.astype(jnp.float32).reshape(B, KV, group, hd)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)        # (B,KV,S,hd)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bkgh,bksh->bkgs", qf, kf) / jnp.sqrt(hd)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully masked rows (lens == 0): zero output, not a uniform average
+    p = jnp.where(jnp.any(valid, axis=1)[:, None, None, None], p, 0.0)
+    out = jnp.einsum("bkgs,bksh->bkgh", p, vf)
+    return out.reshape(B, H, hd).astype(q.dtype)

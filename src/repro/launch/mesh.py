@@ -157,6 +157,10 @@ def cache_shardings(cache_abstract, mesh: Mesh, *, seq_len: int,
     footprint rule that fits 1 TB 32K caches on 16 GiB chips).
     Mamba conv (L,B,W,CH): CH→model when divisible. Mamba ssm state
     (L,B,H,P,N): H→model when divisible. pos (B,)→data.
+    Paged KV pools (L, n_pages, page_size, KV, hd): pages→data (the pool
+    splits across data shards; the block-table gather is GSPMD's),
+    kv-heads→model; block_table rows→data; the free mask replicates (the
+    allocator cumsums over it).
     """
     tp = mesh.shape.get("model", 1)
     ba = batch_axes(mesh)
@@ -165,16 +169,39 @@ def cache_shardings(cache_abstract, mesh: Mesh, *, seq_len: int,
     for a in ba:
         dp *= mesh.shape[a]
 
+    paged = hasattr(cache_abstract, "block_table")
     named, treedef = tree_flatten_with_names(cache_abstract)
     out = []
     for name, leaf in named:
         nd = leaf.ndim
         spec: list = [None] * nd
+        leafname = name.rsplit("/", 1)[-1]
+        # paged-layout bookkeeping leaves: block_table (B, NP) is per-row
+        # on dim 0; the free mask (P,) is pool-global — the allocator
+        # cumsums over it, so keep it replicated
+        if leafname == "block_table":
+            if leaf.shape[0] % dp == 0:
+                spec[0] = batch_entry
+            out.append(NamedSharding(mesh, P(*spec)))
+            continue
+        if leafname == "free":
+            out.append(NamedSharding(mesh, P(*spec)))
+            continue
         if nd >= 2 and leaf.shape[1] % dp == 0:
+            # dense: dim 1 is the batch; paged pools: dim 1 is the page
+            # axis — splitting pages over the data axis is the memory win
+            # (each shard holds n_pages/dp pages), GSPMD gathers via the
+            # block table
             spec[1] = batch_entry
         if nd == 1 and leaf.shape[0] % dp == 0:      # pos (B,)
             spec[0] = batch_entry
-        leafname = name.rsplit("/", 1)[-1]
+        if nd == 5 and leafname in ("k", "v") and paged:
+            # pool (L, P, ps, KV, hd): kv-heads -> model when divisible
+            KV = leaf.shape[3]
+            if KV % tp == 0 and KV >= tp:
+                spec[3] = "model"
+            out.append(NamedSharding(mesh, P(*spec)))
+            continue
         if nd == 5 and leafname in ("k", "v"):
             S, KV = leaf.shape[2], leaf.shape[3]
             if KV % tp == 0 and KV >= tp:

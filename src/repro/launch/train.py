@@ -41,6 +41,18 @@ def main(argv=None):
     ap.add_argument("--rollout-episodes", type=int, default=None,
                     help="compiled backend: episodes per rollout (> batch "
                          "keeps slots full via in-graph refill)")
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="compiled backend KV layout: dense = per-slot "
+                         "(max_context,) rows; paged = shared page pool + "
+                         "block tables (slot refill frees pages instead of "
+                         "zeroing, pool memory scales with live tokens)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged layout: tokens per KV page")
+    ap.add_argument("--cache-pages", type=int, default=None,
+                    help="paged layout: pool size in pages (default: full "
+                         "per-slot provisioning batch*ceil(ctx/page); pass "
+                         "less to cap memory at expected live tokens)")
     ap.add_argument("--max-turns", type=int, default=3)
     ap.add_argument("--max-turn-tokens", type=int, default=6)
     ap.add_argument("--max-context", type=int, default=160)
@@ -77,7 +89,9 @@ def main(argv=None):
         max_turn_tokens=args.max_turn_tokens, max_context=args.max_context,
         kl_coef=args.kl_coef, clip_eps=args.clip_eps,
         advantage=args.advantage, rollout_backend=args.rollout_backend,
-        rollout_episodes=args.rollout_episodes, seed=args.seed)
+        rollout_episodes=args.rollout_episodes,
+        cache_layout=args.cache_layout, page_size=args.page_size,
+        cache_pages=args.cache_pages, seed=args.seed)
 
     params, opt_state, ref_params = trainer.init_state()
     log_path = Path(args.log)

@@ -333,6 +333,113 @@ def decode_attention(p, x, kv: KVEntry, pos, *, n_heads, n_kv_heads,
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), kv
 
 
+def paged_prefill_attention(p, x, kv: KVEntry, block_table, *, n_heads,
+                            n_kv_heads, head_dim, rope_theta,
+                            attn_impl: str = "xla"):
+    """Causal attention over the prompt; scatters k/v into pool pages.
+
+    kv.k/v: (P, ps, KV, hd) — this layer's slice of the shared page pool.
+    block_table: (B, NP) int32, already populated for ``ceil(S/ps)``
+    pages per row (``transformer._paged_prefill`` allocates once, outside
+    the layer scan). Attention itself is identical to
+    ``prefill_attention`` — the prompt's q/k/v are all in hand; only the
+    cache write changes (a per-page scatter instead of a dense slice).
+    """
+    B, S, _ = x.shape
+    P, ps = kv.k.shape[0], kv.k.shape[1]
+    positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    q = _maybe_seq_parallel(q, n_heads)
+
+    npp = -(-S // ps)                      # pages covering the prompt
+    pad = npp * ps - S
+    pages = block_table[:, :npp]
+    pages = jnp.where(pages >= 0, pages, P)                 # OOB -> drop
+
+    def scatter(pool, new):
+        buf = jnp.pad(new.astype(pool.dtype),
+                      ((0, 0), (0, pad), (0, 0), (0, 0)))
+        buf = buf.reshape(B, npp, ps, new.shape[2], new.shape[3])
+        return pool.at[pages].set(buf, mode="drop")
+
+    new_kv = KVEntry(scatter(kv.k, k), scatter(kv.v, v))
+    mask = causal_mask(S, S)
+    if attn_impl in ("pallas", "paged"):
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=0,
+                                     interpret=True)
+    else:
+        out = _sdpa(q, k, v, mask)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_kv
+
+
+def paged_decode_attention(p, x, kv: KVEntry, block_table, pos, *, wpage,
+                           woff, scrub=None, n_heads, n_kv_heads, head_dim,
+                           rope_theta, attn_impl: str = "xla"):
+    """One-token decode against a paged KV pool. x: (B,1,D).
+
+    kv.k/v: (P, ps, KV, hd) — this layer's slice of the shared page pool.
+    block_table: (B, NP) int32 (-1 = unmapped); pos: (B,) absolute token
+    positions. wpage/woff: per-row write page + in-page offset, computed
+    once per token by the caller (the allocator runs OUTSIDE the layer
+    scan — every layer shares the same block table). ``wpage == P`` is
+    the drop sentinel (non-advancing rows, exhausted pool). scrub:
+    optional (B,) page indices to zero before the write (pages mapped
+    mid-row while recovering from pool exhaustion — the recycled
+    contents must not leak into the validity window; sentinel P = none).
+
+    attn_impl: "xla" gathers the row's pages into a dense view and reuses
+    the masked-softmax math (the pure-jnp oracle layout); "paged" (or
+    "pallas") runs the Pallas kernel that gathers through the block table
+    in the grid — no dense per-row view is ever materialized.
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    P, ps = kv.k.shape[0], kv.k.shape[1]
+    NP = block_table.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k_new = apply_rope(k_new, positions, rope_theta)
+    if scrub is not None:
+        zero = jnp.zeros((), kv.k.dtype)
+        kv = KVEntry(kv.k.at[scrub].set(zero, mode="drop"),
+                     kv.v.at[scrub].set(zero, mode="drop"))
+    kv = KVEntry(
+        kv.k.at[wpage, woff].set(k_new[:, 0].astype(kv.k.dtype),
+                                 mode="drop"),
+        kv.v.at[wpage, woff].set(v_new[:, 0].astype(kv.v.dtype),
+                                 mode="drop"))
+    lens = pos + 1                         # current token included
+    if attn_impl in ("paged", "pallas"):
+        from repro.kernels.paged_attention import ops as pa_ops
+        out = pa_ops.paged_decode_attention(q[:, 0], kv.k, kv.v,
+                                            block_table, lens,
+                                            interpret=True)
+        out = out[:, None]
+    else:
+        # gather + mask per kernels/paged_attention/ref.py (keep the
+        # validity predicate in sync with the oracle), but attend via
+        # _sdpa rather than the f32 oracle itself: the fallback must
+        # match the DENSE decode path's mixed-precision numerics (bf16
+        # matmuls) bitwise, or dense-vs-paged engine trajectories drift
+        bt_c = jnp.clip(block_table, 0, P - 1)
+        k = kv.k[bt_c].reshape(B, NP * ps, n_kv_heads, head_dim)
+        v = kv.v[bt_c].reshape(B, NP * ps, n_kv_heads, head_dim)
+        s_idx = jnp.arange(NP * ps)[None, :]
+        valid = ((s_idx < lens[:, None])
+                 & jnp.repeat(block_table >= 0, ps, axis=1))
+        mask = jnp.where(valid, 0.0,
+                         NEG_INF).astype(jnp.float32)[:, None, None, :]
+        out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+    out = out.reshape(B, 1, n_heads * head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), kv
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -1,0 +1,83 @@
+"""In-graph page-pool primitives for the paged KV cache (vLLM-style).
+
+A *page pool* is a shared array of fixed-size KV blocks; each decode slot
+maps its context onto pool pages through a per-slot *block table*. The
+allocator here is pure ``jnp`` — allocation and release are rank/cumsum
+scatters with no host sync, so they run inside the compiled rollout
+macro-step (the whole point: slot refill *releases* a slot's pages back
+to the pool instead of zeroing a dense ``(max_context,)`` cache row, and
+pool memory scales with *live* tokens instead of allocated capacity).
+
+Conventions shared by every consumer (``models/transformer.py`` paged
+paths, ``kernels/paged_attention``, ``rl/engine/paging.py``):
+
+  - ``block_table``: ``(B, pages_per_slot) int32``; ``PAGE_UNMAPPED``
+    (= -1) marks an unallocated entry. Slot-local page index ``j`` holds
+    absolute token positions ``[j*page_size, (j+1)*page_size)``.
+  - ``free``: ``(n_pages,) bool`` — True = page available.
+  - Failed allocations (pool exhausted) return the sentinel ``n_pages``
+    and leave the block table unmapped; writes through the sentinel are
+    dropped by ``mode="drop"`` scatters. Callers size the pool so this
+    cannot happen on the hot path (``pool_pages_needed``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PAGE_UNMAPPED = -1
+
+
+def pages_per_slot(s_max: int, page_size: int) -> int:
+    """Block-table width covering ``s_max`` tokens."""
+    return -(-s_max // page_size)
+
+
+def pool_pages_needed(batch: int, s_max: int, page_size: int) -> int:
+    """Pool size that can never exhaust: full per-slot provisioning.
+    Callers chasing the memory win pass a smaller pool sized to their
+    *expected live* tokens instead (see ``rl/engine/README.md``)."""
+    return batch * pages_per_slot(s_max, page_size)
+
+
+def alloc_pages(free, need):
+    """Grab one free page for every row with ``need=True``.
+
+    free: (P,) bool; need: (B,) bool.
+    Returns ``(pages, free')`` where ``pages`` is (B,) int32 — the r-th
+    needing row receives the r-th free page; rows with ``need=False`` or
+    beyond the free supply get the OOB sentinel ``P``. Pure rank-match:
+    no loop, no host sync, safe inside ``lax.scan`` bodies.
+    """
+    free = jnp.asarray(free)
+    need = jnp.asarray(need)
+    P = free.shape[0]
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1           # (B,) alloc rank
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1      # (P,)
+    total_free = jnp.sum(free.astype(jnp.int32))
+    # rank_to_page[r] = pool index of the r-th free page
+    rank_to_page = jnp.full((P,), P, jnp.int32).at[
+        jnp.where(free, free_rank, P)].set(
+            jnp.arange(P, dtype=jnp.int32), mode="drop")
+    ok = need & (rank < total_free)
+    pages = jnp.where(ok, rank_to_page[jnp.clip(rank, 0, P - 1)], P)
+    free = free.at[pages].set(False, mode="drop")
+    return pages.astype(jnp.int32), free
+
+
+def release_pages(free, block_table, rows):
+    """Return every page owned by ``rows`` (bool (B,)) to the pool and
+    unmap those block-table rows. Returns ``(free', block_table')``."""
+    block_table = jnp.asarray(block_table)
+    rows = jnp.asarray(rows)
+    P = free.shape[0]
+    owned = rows[:, None] & (block_table >= 0)
+    idx = jnp.where(owned, block_table, P)                  # OOB -> drop
+    free = free.at[idx.reshape(-1)].set(True, mode="drop")
+    block_table = jnp.where(rows[:, None], PAGE_UNMAPPED, block_table)
+    return free, block_table
+
+
+def pages_in_use(free) -> jax.Array:
+    """Scalar int32: currently allocated pages (pool occupancy stat)."""
+    return jnp.sum((~jnp.asarray(free)).astype(jnp.int32))

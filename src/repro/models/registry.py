@@ -53,7 +53,21 @@ class Model:
             return out                       # (logits, aux dict)
         return out, {}
 
-    def init_cache(self, batch, s_max, dtype=jnp.bfloat16):
+    def init_cache(self, batch, s_max, dtype=jnp.bfloat16, **layout_kw):
+        """layout_kw: cache-layout options (``layout="paged"``,
+        ``page_size``, ``n_pages``) — currently a dense-family feature;
+        families whose ``init_cache`` doesn't take them reject with a
+        clear error (signature check, so genuine TypeErrors propagate)."""
+        if layout_kw:
+            import inspect
+            params = inspect.signature(self._init_cache).parameters
+            unsupported = sorted(k for k in layout_kw if k not in params)
+            if unsupported:
+                raise ValueError(
+                    f"family {self.cfg.family!r} does not support cache "
+                    f"layout options {unsupported}")
+            return self._init_cache(self.cfg, batch, s_max, dtype,
+                                    **layout_kw)
         return self._init_cache(self.cfg, batch, s_max, dtype)
 
     def prefill(self, params, tokens, cache, *, extra=None, attn_impl="xla"):

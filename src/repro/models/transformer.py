@@ -15,6 +15,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.models import paging
 from repro.models.param import pdef
 
 
@@ -84,8 +85,45 @@ class DecodeCache(NamedTuple):
     pos: jax.Array          # (B,) int32 per-row cache fill (ragged batches)
 
 
+class PagedDecodeCache(NamedTuple):
+    """Paged KV layout: one shared page pool per layer + per-slot block
+    tables (vLLM-style). Pool memory scales with *live* tokens across the
+    batch instead of ``B * s_max``; freeing a slot is a block-table/free-
+    mask update, not a cache-row zero (``rl/engine/paging.py``)."""
+    kv: L.KVEntry           # stacked: (n_layers, n_pages, page_size, KV, hd)
+    block_table: jax.Array  # (B, pages_per_slot) int32; -1 = unmapped
+    free: jax.Array         # (n_pages,) bool — True = page available
+    pos: jax.Array          # (B,) int32 per-row cache fill (ragged batches)
+
+    @property
+    def page_size(self) -> int:
+        return self.kv.k.shape[2]
+
+    @property
+    def n_pages(self) -> int:
+        return self.kv.k.shape[1]
+
+
 def init_cache(cfg: ModelConfig, batch: int, s_max: int,
-               dtype=jnp.bfloat16) -> DecodeCache:
+               dtype=jnp.bfloat16, *, layout: str = "dense",
+               page_size: int = 16, n_pages: Optional[int] = None):
+    if layout == "paged":
+        assert cfg.sliding_window == 0, (
+            "paged cache does not support sliding-window archs (the ring "
+            "buffer already gives them an O(window) footprint)")
+        nps = paging.pages_per_slot(s_max, page_size)
+        if n_pages is None:      # full provisioning: exhaustion impossible
+            n_pages = batch * nps
+        shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+                 cfg.head_dim_)
+        return PagedDecodeCache(
+            kv=L.KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+            block_table=jnp.full((batch, nps), paging.PAGE_UNMAPPED,
+                                 jnp.int32),
+            free=jnp.ones((n_pages,), bool),
+            pos=jnp.zeros((batch,), jnp.int32),
+        )
+    assert layout == "dense", layout
     # sliding-window archs allocate a ring buffer of the window size:
     # O(window) footprint regardless of context (layers.decode_attention)
     if cfg.sliding_window > 0:
@@ -97,11 +135,49 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int,
     )
 
 
-def prefill(cfg: ModelConfig, params, tokens, cache: DecodeCache, *,
+def _paged_prefill(cfg: ModelConfig, params, tokens,
+                   cache: PagedDecodeCache, *, attn_impl: str = "xla"):
+    """Prompt pass for the paged layout: allocate the covering pages once
+    (shared by every layer), then scatter each layer's k/v into them."""
+    x = L.embed(params["embedding"], tokens)
+    B, S = tokens.shape
+    ps, P = cache.page_size, cache.n_pages
+    npp = paging.pages_per_slot(S, ps)
+    assert npp <= cache.block_table.shape[1], (S, ps)
+    bt, free = cache.block_table, cache.free
+    for j in range(npp):                   # static page-slot loop
+        need = bt[:, j] < 0
+        pages, free = paging.alloc_pages(free, need)
+        bt = bt.at[:, j].set(jnp.where(need & (pages < P), pages, bt[:, j]))
+
+    def body(x, scanned):
+        layer_p, kv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.paged_prefill_attention(
+            layer_p["attn"], h, kv_l, bt, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+            rope_theta=cfg.rope_theta, attn_impl=attn_impl)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        x = x + L.mlp(layer_p["mlp"], h)
+        return x, new_kv
+
+    x, new_kv = lax.scan(body, x, (params["layers"], cache.kv))
+    x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)[:, 0]
+    return logits, PagedDecodeCache(kv=new_kv, block_table=bt, free=free,
+                                    pos=jnp.full((B,), S, jnp.int32))
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *,
             extra=None, attn_impl: str = "xla"):
     """Run the prompt through the model, filling the cache. Returns
     (logits_last, cache)."""
     del extra
+    if isinstance(cache, PagedDecodeCache):
+        return _paged_prefill(cfg, params, tokens, cache,
+                              attn_impl=attn_impl)
     x = L.embed(params["embedding"], tokens)
     S = tokens.shape[1]
 
@@ -127,12 +203,68 @@ def prefill(cfg: ModelConfig, params, tokens, cache: DecodeCache, *,
                                pos=jnp.full((B,), S, jnp.int32))
 
 
-def decode_step(cfg: ModelConfig, params, token, cache: DecodeCache, *,
+def _paged_decode_step(cfg: ModelConfig, params, token,
+                       cache: PagedDecodeCache, *, attn_impl: str = "xla",
+                       advance=None):
+    """One decode step on the paged layout. The page allocator runs ONCE
+    per token, outside the layer scan — every layer shares the block
+    table, so a boundary crossing costs one rank-match alloc, not one per
+    layer."""
+    x = L.embed(params["embedding"], token[:, None])
+    B = token.shape[0]
+    pos = cache.pos
+    adv = jnp.ones((B,), bool) if advance is None else advance
+    ps, P = cache.page_size, cache.n_pages
+    rows = jnp.arange(B)
+
+    pidx = jnp.clip(pos // ps, 0, cache.block_table.shape[1] - 1)
+    mapped = cache.block_table[rows, pidx] >= 0
+    need = adv & ~mapped
+    pages, free = paging.alloc_pages(cache.free, need)
+    fresh = need & (pages < P)
+    bt = cache.block_table.at[rows, pidx].set(
+        jnp.where(fresh, pages, cache.block_table[rows, pidx]))
+    wpage = bt[rows, pidx]                                  # (B,) may be -1
+    w_ok = adv & (wpage >= 0)
+    wpage = jnp.where(w_ok, wpage, P)                       # OOB -> drop
+    woff = pos % ps
+    # a page normally gets mapped at woff == 0 and fills monotonically, so
+    # recycled contents below the fill line are never valid. The exception
+    # is recovery from transient pool exhaustion: writes dropped but pos
+    # advanced, so the page maps mid-row — scrub it, or offsets < woff
+    # would expose the freed episode's K/V as live context
+    scrub = jnp.where(fresh & (woff > 0), wpage, P)         # OOB -> drop
+
+    def body(x, scanned):
+        layer_p, kv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.paged_decode_attention(
+            layer_p["attn"], h, kv_l, bt, pos, wpage=wpage, woff=woff,
+            scrub=scrub, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+            attn_impl=attn_impl)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        x = x + L.mlp(layer_p["mlp"], h)
+        return x, new_kv
+
+    x, new_kv = lax.scan(body, x, (params["layers"], cache.kv))
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)[:, 0]
+    return logits, PagedDecodeCache(kv=new_kv, block_table=bt, free=free,
+                                    pos=pos + adv.astype(jnp.int32))
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, *,
                 extra=None, attn_impl: str = "xla", advance=None):
     """One decode step. token: (B,) int32. Returns (logits (B,V), cache).
     advance: optional (B,) bool — rows with False are no-ops (ragged
     multi-turn rollout; see layers.decode_attention)."""
     del extra
+    if isinstance(cache, PagedDecodeCache):
+        return _paged_decode_step(cfg, params, token, cache,
+                                  attn_impl=attn_impl, advance=advance)
     x = L.embed(params["embedding"], token[:, None])
     pos = cache.pos
     B = token.shape[0]

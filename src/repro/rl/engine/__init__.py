@@ -31,6 +31,11 @@ provides both the reference and the production-shaped implementation:
 
   - ``engine/common.py``: the action protocol, sampling, rng derivation
     and stats shared by both engines.
+
+  - ``engine/paging.py``: refill-side page management for the paged KV
+    cache layout (``cache_layout="paged"``) — slot refill releases the
+    slot's pages back to a shared pool instead of zeroing a dense cache
+    row. See README.md in this directory for the layout trade-offs.
 """
 from repro.rl.engine.common import ACTION_BASE, RolloutStats
 from repro.rl.engine.compiled import CompiledRolloutEngine

@@ -42,22 +42,27 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.rl.algo import reinforce_advantages
-from repro.rl.engine import common, slots
+from repro.rl.engine import common, paging, slots
 from repro.rl.engine.common import ACTION_BASE
 from repro.rl.envs.base import TOK_PAD, default_reset_rows
 from repro.rl.experience import ExperienceBatch
 
 
 def _reset_cache_rows(cache, refill):
-    """Zero a decode cache row-wise for refilled slots (fresh episode).
+    """Reset a decode cache row-wise for refilled slots (fresh episode).
 
-    Generic over cache families: rank-1 leaves (``pos``) are per-row on
-    dim 0, everything else (KV rings, conv windows, SSM states) on dim 1.
+    Paged caches release the slot's pages back to the shared pool — an
+    O(pages_per_slot) bookkeeping update, no KV data touched (see
+    ``rl/engine/paging.py``). Dense caches are zeroed generically over
+    cache families: rank-1 leaves (``pos``) are per-row on dim 0,
+    everything else (KV rings, conv windows, SSM states) on dim 1.
     Zeroing ``pos`` alone suffices for ring-buffer attention caches (slot
     validity is derived from ``pos``), but SSM/conv states are not
     position-invalidated — zeroing every leaf is correct for all families.
     """
     refill = jnp.asarray(refill)
+    if paging.is_paged(cache):
+        return paging.release_slot_pages(cache, refill)
 
     def zero(leaf):
         bdim = 0 if leaf.ndim == 1 else 1
@@ -83,7 +88,9 @@ class CompiledRolloutEngine:
     def __init__(self, model, env, *, max_turns: int = 4,
                  max_turn_tokens: int = 8, max_context: int = 256,
                  temperature: float = 1.0,
-                 mesh_config=None, attn_impl: str = "xla"):
+                 mesh_config=None, attn_impl: str = "xla",
+                 cache_layout: str = "dense", page_size: int = 16,
+                 cache_pages: Optional[int] = None):
         cfg = model.cfg
         assert ACTION_BASE + env.n_actions <= cfg.vocab_size
         assert getattr(env, "jit_safe", False), (
@@ -91,6 +98,11 @@ class CompiledRolloutEngine:
             f"reset/step/encode_obs + reset_rows) for the compiled engine")
         assert env.obs_len + max_turn_tokens + env.obs_len <= max_context, (
             "max_context cannot fit even one turn")
+        assert cache_layout in ("dense", "paged"), cache_layout
+        if attn_impl == "paged" and cache_layout != "paged":
+            raise ValueError(
+                "attn_impl='paged' requires cache_layout='paged' (the "
+                "kernel reads the pool through the block table)")
         self.model = model
         self.env = env
         self.max_turns = max_turns
@@ -98,6 +110,9 @@ class CompiledRolloutEngine:
         self.max_context = max_context
         self.temperature = temperature
         self.attn_impl = attn_impl
+        self.cache_layout = cache_layout
+        self.page_size = page_size
+        self.cache_pages = cache_pages      # None = full provisioning
         self._mesh_config = mesh_config
         self._compiled: Dict[Tuple[Any, int, int], Any] = {}
         # real source layout of the last harvested batch (Data Dispatcher
@@ -399,7 +414,12 @@ class CompiledRolloutEngine:
         T = self.max_context
         state = env.reset(rng, B)
         live = jnp.arange(B) < N
-        cache = model.init_cache(B, T)
+        if self.cache_layout == "paged":
+            cache = model.init_cache(B, T, layout="paged",
+                                     page_size=self.page_size,
+                                     n_pages=self.cache_pages)
+        else:
+            cache = model.init_cache(B, T)
         return slots.SlotCarry(
             cache=cache,
             logits=jnp.zeros((B, model.cfg.vocab_size), jnp.float32),

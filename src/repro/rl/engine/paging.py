@@ -1,0 +1,51 @@
+"""Refill-side page management for the compiled rollout engine.
+
+With the dense cache layout, slot refill zeroes the slot's whole
+``(max_context,)`` cache row — O(L · S · KV · hd) writes per refilled
+slot, and the row's memory stays allocated for the episode's *capacity*
+whether or not the episode ever grows that long. With the paged layout
+(``models/transformer.PagedDecodeCache``), refill instead *releases* the
+slot's pages back to the shared pool: an O(pages_per_slot) block-table /
+free-mask update with no touch of the KV data itself. Freed pages are
+immediately reusable by any slot, so pool memory tracks the *live*
+tokens across the batch — the continuous-batching memory model that lets
+``n_pages`` be sized below ``B * pages_per_slot`` when episodes are
+shorter than ``max_context`` (see ``rl/engine/README.md``).
+
+Everything here is pure ``jnp`` and runs inside the compiled macro-step.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import paging
+
+
+def is_paged(cache) -> bool:
+    """Structural check usable on any family's cache pytree (the engine
+    stays family-generic — no model imports)."""
+    return hasattr(cache, "block_table") and hasattr(cache, "free")
+
+
+def release_slot_pages(cache, refill):
+    """Free every page owned by ``refill`` slots and reset their fill
+    position — the paged replacement for zeroing dense cache rows. The
+    stale page contents are never read again: a released page is invisible
+    (unmapped) until re-allocated; re-allocated pages normally map at
+    in-page offset 0 and fill monotonically under the ``pos``-derived
+    length masks, and the one exception — a page mapped mid-row while
+    recovering from transient pool exhaustion — is scrubbed at allocation
+    (``layers.paged_decode_attention``), so no cross-episode K/V ever
+    enters a validity window."""
+    free, block_table = paging.release_pages(cache.free, cache.block_table,
+                                             refill)
+    return cache._replace(
+        block_table=block_table,
+        free=free,
+        pos=jnp.where(refill, 0, cache.pos),
+    )
+
+
+def pool_stats(cache):
+    """(pages_in_use, n_pages) for occupancy telemetry."""
+    return paging.pages_in_use(cache.free), cache.free.shape[0]

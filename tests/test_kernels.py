@@ -8,6 +8,8 @@ import pytest
 from repro.kernels.decode_attention import (decode_attention,
                                             decode_attention_ref)
 from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           paged_decode_attention_ref)
 from repro.kernels.ssd_scan import ssd_ref, ssd_scan
 
 TOLS = {jnp.float32: dict(atol=2e-5, rtol=1e-4),
@@ -89,6 +91,197 @@ def test_decode_attention_fully_masked_rows_are_finite(rng):
     valid = jnp.zeros((B, S), bool)
     out = decode_attention(q, k, v, valid, interpret=True)
     assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# Paged decode attention (block-table gather inside the kernel grid)
+# ---------------------------------------------------------------------------
+
+def _paged_case(rng, B, NP, P, ps, H, KV, hd, dtype, *, lens=None):
+    """Random paged-attention inputs with a NON-CONTIGUOUS block table
+    (pages drawn by permutation, so consecutive slot positions live on
+    scattered pool pages) and ragged per-row lengths whose last page is
+    partially filled."""
+    q = _rand(rng, (B, H, hd), dtype)
+    kp = _rand(jax.random.fold_in(rng, 1), (P, ps, KV, hd), dtype)
+    vp = _rand(jax.random.fold_in(rng, 2), (P, ps, KV, hd), dtype)
+    perm = jax.random.permutation(jax.random.fold_in(rng, 3),
+                                  P)[:B * NP].reshape(B, NP)
+    if lens is None:
+        lens = jax.random.randint(jax.random.fold_in(rng, 4), (B,), 1,
+                                  NP * ps + 1)
+    lens = jnp.asarray(lens, jnp.int32)
+    npages = -(-lens // ps)                # mapped pages per row
+    bt = jnp.where(jnp.arange(NP)[None, :] < npages[:, None], perm, -1)
+    return q, kp, vp, bt, lens
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,NP,P,ps,H,KV,hd", [
+    (2, 4, 16, 8, 4, 2, 64),
+    (3, 8, 32, 16, 8, 8, 32),
+    (2, 4, 8, 8, 14, 2, 64),     # qwen2's non-pow2 head count, exact pool
+    (1, 2, 64, 128, 2, 1, 128),  # MQA, big pages, mostly-unmapped pool
+])
+def test_paged_decode_attention_matches_ref(B, NP, P, ps, H, KV, hd, dtype,
+                                            rng):
+    q, kp, vp, bt, lens = _paged_case(rng, B, NP, P, ps, H, KV, hd, dtype)
+    out = paged_decode_attention(q, kp, vp, bt, lens, interpret=True)
+    expect = paged_decode_attention_ref(q, kp, vp, bt, lens)
+    assert out.shape == expect.shape and out.dtype == expect.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **TOLS[dtype])
+
+
+def test_paged_decode_attention_partial_last_page(rng):
+    """Pin the ragged boundary explicitly: one full-page row, one row one
+    token into a fresh page, one row one token short of a page."""
+    B, NP, P, ps, H, KV, hd = 3, 4, 16, 8, 4, 2, 32
+    lens = [ps * 2, ps + 1, ps - 1]
+    q, kp, vp, bt, lens = _paged_case(rng, B, NP, P, ps, H, KV, hd,
+                                      jnp.float32, lens=lens)
+    out = paged_decode_attention(q, kp, vp, bt, lens, interpret=True)
+    expect = paged_decode_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               **TOLS[jnp.float32])
+
+
+def test_paged_decode_attention_matches_dense_kernel(rng):
+    """The paged kernel agrees with the DENSE decode kernel on the same
+    logical cache: scatter a dense (B,S,KV,hd) cache into pool pages
+    through a shuffled block table and compare (the acceptance gate for
+    swapping cache layouts under the engine)."""
+    B, S, H, KV, hd, ps = 2, 128, 4, 2, 64, 16
+    NP = S // ps
+    P = B * NP + 4                          # spare pages stay unmapped
+    q = _rand(rng, (B, H, hd), jnp.float32)
+    k = _rand(jax.random.fold_in(rng, 1), (B, S, KV, hd), jnp.float32)
+    v = _rand(jax.random.fold_in(rng, 2), (B, S, KV, hd), jnp.float32)
+    pos = jax.random.randint(jax.random.fold_in(rng, 3), (B,), 1, S)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+
+    perm = jax.random.permutation(jax.random.fold_in(rng, 4),
+                                  P)[:B * NP].reshape(B, NP)
+    kp = jnp.zeros((P, ps, KV, hd), jnp.float32).at[perm].set(
+        k.reshape(B, NP, ps, KV, hd))
+    vp = jnp.zeros((P, ps, KV, hd), jnp.float32).at[perm].set(
+        v.reshape(B, NP, ps, KV, hd))
+
+    dense = decode_attention(q, k, v, valid, interpret=True)
+    paged = paged_decode_attention(q, kp, vp, perm, pos + 1,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_paged_decode_attention_fully_masked_rows_are_finite(rng):
+    B, NP, P, ps, H, KV, hd = 2, 2, 8, 8, 4, 2, 32
+    q, kp, vp, bt, _ = _paged_case(rng, B, NP, P, ps, H, KV, hd,
+                                   jnp.float32)
+    lens = jnp.zeros((B,), jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, lens, interpret=True)
+    assert bool(jnp.isfinite(out).all())
+    ref = paged_decode_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_page_allocator_rank_matching():
+    """alloc/release invariants: distinct pages per needing row, sentinel
+    on exhaustion, released pages immediately reusable."""
+    from repro.models import paging
+    free = jnp.ones((4,), bool)
+    pages, free = paging.alloc_pages(free, jnp.array([True, False, True]))
+    assert np.asarray(pages)[1] == 4                 # sentinel: no need
+    assert len({int(pages[0]), int(pages[2])}) == 2  # distinct pages
+    assert int(paging.pages_in_use(free)) == 2
+    # exhaust: 3 needing rows, 2 free pages -> one sentinel
+    pages2, free = paging.alloc_pages(free, jnp.array([True, True, True]))
+    got = np.asarray(pages2)
+    assert (got < 4).sum() == 2 and (got == 4).sum() == 1
+    assert int(paging.pages_in_use(free)) == 4
+    # release row 0's pages through a block table; pool drains back
+    bt = jnp.array([[int(pages[0]), int(pages[2])], [-1, -1]], jnp.int32)
+    free, bt = paging.release_pages(free, bt, jnp.array([True, False]))
+    assert int(paging.pages_in_use(free)) == 2
+    assert (np.asarray(bt)[0] == -1).all()
+    pages3, _ = paging.alloc_pages(free, jnp.array([True, True]))
+    assert (np.asarray(pages3) < 4).all()            # reuse succeeded
+
+
+def test_paged_prefill_matches_dense_prefill(rng):
+    """Prompt pass parity across cache layouts: same last-token logits,
+    and the pages hold exactly the dense cache's K/V (including a
+    PARTIALLY FILLED last page: S % page_size != 0 exercises the
+    pad-and-scatter write). Continued decode stays in lockstep across the
+    prefill/decode boundary."""
+    import jax.numpy as jnp
+    from repro.configs.base import get_smoke_config
+    from repro.models.registry import build_model
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, CAP, ps = 2, 21, 32, 8             # 21 = 2 full pages + 5
+    toks = jax.random.randint(rng, (B, CAP), 0, cfg.vocab_size)
+    ld, dcache = model.prefill(params, toks[:, :S], model.init_cache(B, CAP))
+    lp, pcache = model.prefill(
+        params, toks[:, :S],
+        model.init_cache(B, CAP, layout="paged", page_size=ps))
+    np.testing.assert_allclose(np.asarray(ld, np.float32),
+                               np.asarray(lp, np.float32),
+                               atol=2e-2, rtol=2e-2)
+    # cache contents: gather the pages back into the dense layout
+    bt = np.asarray(pcache.block_table)
+    kp = np.asarray(pcache.kv.k, np.float32)  # (L, P, ps, KV, hd)
+    kd = np.asarray(dcache.kv.k, np.float32)  # (L, B, CAP, KV, hd)
+    for b in range(B):
+        for s in range(S):
+            page, off = bt[b, s // ps], s % ps
+            assert page >= 0
+            np.testing.assert_array_equal(kp[:, page, off], kd[:, b, s])
+    assert int((~pcache.free).sum()) == B * (-(-S // ps))
+    # decode across the prefill boundary (first step lands mid-page)
+    for t in range(S, CAP):
+        ld, dcache = model.decode_step(params, toks[:, t], dcache)
+        lp, pcache = model.decode_step(params, toks[:, t], pcache)
+        np.testing.assert_allclose(np.asarray(ld, np.float32),
+                                   np.asarray(lp, np.float32),
+                                   atol=2e-2, rtol=2e-2)
+
+
+def test_paged_cache_exhaustion_recovery_scrubs_recycled_pages(rng):
+    """Transient pool exhaustion drops a row's writes while its pos keeps
+    advancing; when a freed page is later mapped mid-row, the recycled
+    contents below the fill line must be scrubbed — otherwise the freed
+    episode's K/V would sit inside the new row's validity window."""
+    import jax.numpy as jnp
+    from repro.configs.base import get_smoke_config
+    from repro.models.registry import build_model
+    from repro.rl.engine import paging as epaging
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, ps = 2, 4
+    cache = model.init_cache(B, 16, layout="paged", page_size=ps, n_pages=1)
+    # poison the pool so any stale read is detectable
+    cache = cache._replace(kv=cache.kv._replace(
+        k=jnp.full_like(cache.kv.k, 100.0),
+        v=jnp.full_like(cache.kv.v, 100.0)))
+    toks = jax.random.randint(rng, (B, 8), 0, cfg.vocab_size)
+    for t in range(3):     # row 0 owns the only page; row 1's writes drop
+        _, cache = model.decode_step(params, toks[:, t], cache)
+    assert int(cache.block_table[1, 0]) == -1 and int(cache.pos[1]) == 3
+    # engine refill frees row 0's page; frozen row 0 leaves the single
+    # free page to row 1, which maps it MID-ROW (woff = 3)
+    cache = epaging.release_slot_pages(cache, jnp.array([True, False]))
+    logits, cache = model.decode_step(params, toks[:, 3], cache,
+                                      advance=jnp.array([False, True]))
+    assert int(cache.block_table[1, 0]) == 0
+    k_page = np.asarray(cache.kv.k[0, 0], np.float32)      # (ps, KV, hd)
+    assert (np.abs(k_page[:3]) < 50).all(), "stale K/V survived the scrub"
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
