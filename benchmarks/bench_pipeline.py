@@ -1,0 +1,93 @@
+"""Pipeline schedule throughput: sync vs async (one-step-off) steps/s.
+
+The EARL Fig. 2 loop run under both ``PipelineSchedule`` modes
+(``core/scheduler.py``): the synchronous baseline serializes Rollout →
+ExpPrep → Dispatch → Update, while the async schedule overlaps
+Rollout(k+1) (rollout mesh, stale params, ``max_policy_lag=1``) with
+Update(k) (trainer mesh, truncated-IS corrected). On the CPU smoke grid
+the async win comes from overlapping host-side rollout work with XLA
+update execution; on a real rollout/trainer submesh split
+(``launch.mesh.rollout_trainer_split``) both sides own their devices.
+
+    PYTHONPATH=src python -m benchmarks.bench_pipeline
+        [--steps 8] [--warmup 2] [--batch 8] [--envs bandit,tictactoe]
+
+CSV: mode,backend,env,batch,steps,seconds,steps_per_s,policy_lag
+
+``main`` returns the rows so ``benchmarks/run.py`` writes
+``BENCH_pipeline.json`` for cross-PR perf tracking.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _build(arch: str):
+    from repro.configs.base import get_smoke_config
+    from repro.models.registry import build_model
+    return build_model(get_smoke_config(arch))
+
+
+def _bench_schedule(model, env_name: str, *, pipeline: str, backend: str,
+                    batch: int, steps: int, warmup: int):
+    from repro.core.stages import EarlTrainer
+    from repro.optim.adamw import adamw
+    from repro.rl.envs import make_env
+
+    tr = EarlTrainer(model=model, env=make_env(env_name),
+                     optimizer=adamw(1e-3, weight_decay=0.0),
+                     batch_size=batch, max_turns=2, max_turn_tokens=4,
+                     max_context=64, rollout_backend=backend,
+                     pipeline=pipeline, max_policy_lag=1, is_rho_max=2.0,
+                     seed=0)
+    params, opt_state, ref = tr.init_state()
+    params, opt_state, _ = tr.train(warmup, params=params,
+                                    opt_state=opt_state, ref_params=ref)
+    t0 = time.perf_counter()
+    _, _, history = tr.train(steps, params=params, opt_state=opt_state,
+                             ref_params=ref)
+    secs = time.perf_counter() - t0
+    lag = max((r.policy_lag for r in history[warmup:]), default=0)
+    return secs, lag
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--envs", default="bandit,tictactoe")
+    ap.add_argument("--backends", default="compiled,python")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--warmup", type=int, default=2)
+    # benchmarks.run calls main() with no argv — don't inherit its flags
+    args = ap.parse_args(argv if argv is not None else [])
+
+    model = _build(args.arch)
+    print("# mode,backend,env,batch,steps,seconds,steps_per_s,policy_lag")
+    rows = []
+    for backend in args.backends.split(","):
+        for env_name in args.envs.split(","):
+            by_mode = {}
+            for mode in ("sync", "async"):
+                secs, lag = _bench_schedule(
+                    model, env_name, pipeline=mode, backend=backend,
+                    batch=args.batch, steps=args.steps, warmup=args.warmup)
+                sps = args.steps / max(secs, 1e-9)
+                by_mode[mode] = sps
+                rows.append(dict(mode=mode, backend=backend, env=env_name,
+                                 batch=args.batch, steps=args.steps,
+                                 seconds=round(secs, 3),
+                                 steps_per_s=round(sps, 2),
+                                 policy_lag=lag))
+                print(f"{mode},{backend},{env_name},{args.batch},"
+                      f"{args.steps},{secs:.3f},{sps:.2f},{lag}")
+            print(f"# {backend}/{env_name}: async is "
+                  f"{by_mode['async'] / max(by_mode['sync'], 1e-9):.2f}x "
+                  f"sync steps/s")
+    return {"schedule_grid": rows}
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if main(sys.argv[1:]) else 1)

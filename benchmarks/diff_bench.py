@@ -1,0 +1,126 @@
+"""Cross-run benchmark regression gate for the nightly CI job.
+
+Compares a fresh benchmark run's ``BENCH_*.json`` files against the
+committed baselines and fails when any tracked throughput metric
+regressed by more than ``--threshold`` (default 30%).
+
+    PYTHONPATH=src python -m benchmarks.diff_bench \
+        --baseline . --candidate /tmp/bench [--threshold 0.30]
+
+Matching is structural: within each ``BENCH_<name>.json`` the ``data``
+payload is walked recursively; every dict that contains a tracked metric
+(a key ending in ``_per_s``) is keyed by its non-metric string/int fields
+(mode, backend, env, batch, ...), and the metric is compared baseline vs
+candidate at the same key. Rows present on only one side are reported
+but do not fail the gate (grids may grow across PRs); a baseline bench
+whose candidate run FAILED does fail it.
+
+Exit code 0 = within budget, 1 = regression (or failed candidate bench).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: metric keys treated as "higher is better" throughputs
+METRIC_SUFFIXES = ("_per_s",)
+
+#: measured (run-dependent) fields excluded from a row's identity so a
+#: trajectory-level change doesn't orphan the row instead of diffing it
+IDENT_EXCLUDE = {"gen_tokens", "equal_mem_batch_ctx", "policy_lag",
+                 "cache_kib"}
+
+
+def _is_metric(key: str) -> bool:
+    return any(key.endswith(s) for s in METRIC_SUFFIXES)
+
+
+def _collect(node, prefix=""):
+    """Yield (row_key, metric_name, value) triples from a payload tree."""
+    if isinstance(node, dict):
+        metrics = {k: v for k, v in node.items()
+                   if _is_metric(k) and isinstance(v, (int, float))}
+        if metrics:
+            ident = ",".join(
+                f"{k}={node[k]}" for k in sorted(node)
+                if not _is_metric(k) and k not in IDENT_EXCLUDE
+                and isinstance(node[k], (str, int, bool)))
+            for m, v in metrics.items():
+                yield f"{prefix}[{ident}]", m, float(v)
+        else:
+            for k, v in sorted(node.items()):
+                yield from _collect(v, f"{prefix}/{k}")
+    elif isinstance(node, list):
+        for v in node:
+            yield from _collect(v, prefix)
+
+
+def _load(path: Path):
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def diff_dirs(baseline: Path, candidate: Path, threshold: float):
+    """Returns (regressions, missing, messages)."""
+    regressions, missing, msgs = [], [], []
+    for base_path in sorted(baseline.glob("BENCH_*.json")):
+        cand_path = candidate / base_path.name
+        base = _load(base_path)
+        if base is None or base.get("data") is None:
+            continue                        # baseline itself has no payload
+        cand = _load(cand_path)
+        if cand is None:
+            missing.append(base_path.name)
+            msgs.append(f"MISSING  {base_path.name}: no candidate run")
+            continue
+        if cand.get("status") != "ok":
+            regressions.append((base_path.name, "status", 0.0, 0.0))
+            msgs.append(f"FAILED   {base_path.name}: candidate bench did "
+                        f"not complete")
+            continue
+        base_rows = {(k, m): v for k, m, v in _collect(base.get("data"))}
+        cand_rows = {(k, m): v for k, m, v in _collect(cand.get("data"))}
+        for (key, metric), bv in sorted(base_rows.items()):
+            cv = cand_rows.get((key, metric))
+            tag = f"{base_path.name}:{key}.{metric}"
+            if cv is None:
+                missing.append(tag)
+                msgs.append(f"MISSING  {tag} (row dropped from grid)")
+                continue
+            if bv <= 0:
+                continue
+            rel = (cv - bv) / bv
+            line = f"{tag}: {bv:.2f} -> {cv:.2f} ({rel:+.1%})"
+            if rel < -threshold:
+                regressions.append((tag, metric, bv, cv))
+                msgs.append("REGRESS  " + line)
+            else:
+                msgs.append("ok       " + line)
+    return regressions, missing, msgs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=".",
+                    help="directory with committed BENCH_*.json")
+    ap.add_argument("--candidate", required=True,
+                    help="directory with the fresh run's BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated relative throughput drop")
+    args = ap.parse_args(argv)
+
+    regressions, missing, msgs = diff_dirs(
+        Path(args.baseline), Path(args.candidate), args.threshold)
+    for m in msgs:
+        print(m)
+    print(f"\n# {len(regressions)} regression(s) > {args.threshold:.0%}, "
+          f"{len(missing)} missing row(s)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,7 @@
 | Fig. 4 dispatch latency           | bench_dispatch | BENCH_dispatch.json |
 | §Roofline table (from dry-run)    | bench_roofline | BENCH_roofline.json |
 | Fig. 2 ① rollout engine tokens/s  | bench_rollout | BENCH_rollout.json |
+| Fig. 2 sync vs async schedule     | bench_pipeline | BENCH_pipeline.json |
 
 Each bench prints its own CSV; this driver wraps them with timing rows
 ``name,us_per_call,derived`` AND writes a machine-readable
@@ -70,7 +71,7 @@ def main(argv=None):
 
     from benchmarks import (bench_context_growth, bench_dispatch,
                             bench_intermediate_sizes, bench_parallelism,
-                            bench_roofline, bench_rollout)
+                            bench_pipeline, bench_roofline, bench_rollout)
 
     benches = [
         ("tab1_intermediate_sizes", "intermediate_sizes",
@@ -83,6 +84,8 @@ def main(argv=None):
         ("roofline_table", "roofline", bench_roofline.main, False),
         ("rollout_engine_tokens_per_s", "rollout", bench_rollout.main,
          True),
+        ("fig2_pipeline_schedule_steps_per_s", "pipeline",
+         bench_pipeline.main, True),
     ]
 
     summary = []

@@ -25,4 +25,12 @@ from repro.core.train_step import (
     make_serve_step,
     make_prefill_step,
 )
-from repro.core.stages import EarlTrainer, StepRecord
+from repro.core.scheduler import PipelineSchedule
+from repro.core.stages import (
+    DispatchStage,
+    EarlTrainer,
+    ExpPrepStage,
+    RolloutStage,
+    StepRecord,
+    UpdateStage,
+)

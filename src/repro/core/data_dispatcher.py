@@ -209,6 +209,35 @@ class DispatchReport:
         return self.__dict__.copy()
 
 
+@dataclass
+class DispatchHandle:
+    """An in-flight asynchronous handoff (``DataDispatcher.dispatch_async``).
+
+    ``batch`` is usable immediately — XLA sequences any consumer after
+    the transfer, so the update stage can be *enqueued* against it while
+    the bytes are still moving (the donated in-flight buffer of the async
+    pipeline schedule). ``result()`` blocks until the transfer lands and
+    appends the report to the dispatcher log (idempotent). The stamped
+    wall time spans enqueue → ``result()`` return, so call it promptly
+    after enqueueing the consumer (as the scheduler does) — deferring it
+    past other blocking work would fold that work into the number.
+    """
+
+    batch: object
+    report: DispatchReport
+    _dispatcher: "DataDispatcher"
+    _t0: float
+    _done: bool = False
+
+    def result(self):
+        if not self._done:
+            jax.block_until_ready(self.batch)
+            self.report.wall_time_s = time.perf_counter() - self._t0
+            self._dispatcher.log.append(self.report)
+            self._done = True
+        return self.batch, self.report
+
+
 class DataDispatcher:
     """Executes + accounts inter-stage batch movement (Fig. 2 ③④⑤)."""
 
@@ -278,6 +307,43 @@ class DataDispatcher:
         )
         self.log.append(rep)
         return out, rep
+
+    def dispatch_async(self, batch, dst_shardings, *,
+                       strategy: str = "direct",
+                       src_shardings=None) -> DispatchHandle:
+        """Start the inter-stage handoff WITHOUT waiting for it to land.
+
+        The async pipeline schedule's entry point (Fig. 2 ③④⑤ overlapped
+        with ①): ``jax.device_put`` to the target shardings is itself
+        asynchronous, so the returned handle's ``batch`` can be fed to
+        the Update stage program immediately — XLA orders the consumer
+        after the transfer — while the host goes on to launch the next
+        rollout. Only the ``direct`` strategy supports this (the
+        centralized baseline's host round-trip is inherently blocking).
+        """
+        if strategy != "direct":
+            raise ValueError(
+                "dispatch_async requires strategy='direct' (centralized "
+                "gathers through the controller host, which blocks)")
+        if src_shardings is None:
+            src_shardings = jax.tree.map(lambda x: x.sharding, batch)
+        plan = self.plan(batch, src_shardings, dst_shardings,
+                         strategy=strategy)
+        t0 = time.perf_counter()
+        out = self.dispatch_direct(batch, dst_shardings)
+        rep = DispatchReport(
+            strategy="direct-async",
+            n_leaves=len(jax.tree.leaves(batch)),
+            total_bytes=tree_size_bytes(batch),
+            moved_bytes=plan.total_bytes,
+            bottleneck_bytes=plan.bottleneck_bytes,
+            wall_time_s=0.0,                 # stamped by handle.result()
+            est_latency_ethernet_s=estimate_latency(
+                plan, bandwidth=ETHERNET_BW),
+            est_latency_ici_s=estimate_latency(plan, bandwidth=ICI_BW),
+        )
+        return DispatchHandle(batch=out, report=rep, _dispatcher=self,
+                              _t0=t0)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,15 @@ RL training (paper Fig. 1). The selector:
      stage whenever the EMA enters a new bucket (the Fig. 2 ① hook), and
      before Experience Preparation (hook ②).
 
+Stage-keyed configs: the async pipeline schedule (``core/scheduler.py``)
+overlaps Rollout(k+1) on the rollout mesh with Update(k) on the trainer
+mesh, so the selector holds one *current* config **per stage**
+(``current_for("rollout")`` / ``current_for("update")``) simultaneously
+instead of switching a single config in place — a switch decision for one
+stage must not yank the mesh out from under the other stage's in-flight
+program. ``current`` remains the rollout stage's config (the original
+single-stage API).
+
 On-hardware, TGS comes from wall-clock timing. On this CPU container the
 default ``measure`` path is the *compiled cost model*: the stage program is
 lowered+compiled for the candidate mesh and scored with the TPU-v5e
@@ -103,6 +112,10 @@ MeasureFn = Callable[[MeshConfig, int], ProfileEntry]
 class ParallelismSelector:
     """Runtime half: EMA context monitor + bucket-crossing switch logic."""
 
+    #: stages that hold an independent *current* config (async pipeline:
+    #: both live simultaneously on disjoint submeshes)
+    STAGES = ("rollout", "update")
+
     def __init__(self, candidates: Sequence[MeshConfig],
                  measure_fn: MeasureFn,
                  buckets: Optional[ContextBuckets] = None,
@@ -114,7 +127,7 @@ class ParallelismSelector:
         self.ema_alpha = ema_alpha
         self.policy: Optional[SelectorPolicy] = None
         self._ema: Optional[float] = None
-        self._current: Optional[MeshConfig] = None
+        self._current: Dict[str, MeshConfig] = {}
         self.switch_log: List[dict] = []
 
     # -- profiling pass (paper: "at the start of the training process") ----
@@ -137,14 +150,19 @@ class ParallelismSelector:
                     f"{self.buckets.label(b)} (all candidates OOM)")
             table[b] = best.config
         self.policy = SelectorPolicy(self.buckets, table, entries)
-        self._current = self.policy.table[0]
+        self._current = {s: self.policy.table[0] for s in self.STAGES}
         return self.policy
 
     # -- runtime monitor ----------------------------------------------------
     @property
     def current(self) -> MeshConfig:
-        assert self._current is not None, "profile() first"
-        return self._current
+        """The Rollout stage's current config (single-stage API)."""
+        return self.current_for("rollout")
+
+    def current_for(self, stage: str) -> MeshConfig:
+        assert self._current, "profile() first"
+        assert stage in self._current, (stage, tuple(self._current))
+        return self._current[stage]
 
     @property
     def ema_context(self) -> float:
@@ -158,20 +176,24 @@ class ParallelismSelector:
             a = self.ema_alpha
             self._ema = a * float(mean_context_len) + (1 - a) * self._ema
 
-    def maybe_switch(self, step: int = -1) -> Optional[Tuple[MeshConfig,
-                                                             MeshConfig]]:
-        """Hook ① / ②: called before Rollout (and ExpPrep). If the EMA
-        context length has entered a bucket whose best config differs from
-        the current one, switch and return (old, new); else None."""
+    def maybe_switch(self, step: int = -1, stage: str = "rollout"
+                     ) -> Optional[Tuple[MeshConfig, MeshConfig]]:
+        """Hook ① / ②: called before a stage launches. If the EMA context
+        length has entered a bucket whose best config differs from the
+        stage's current one, switch *that stage's* config and return
+        (old, new); else None. Other stages keep their config — in the
+        async schedule their previous step may still be running on it."""
         assert self.policy is not None, "profile() first"
         if self._ema is None:
             return None
         target = self.policy.best(self._ema)
-        if target == self._current:
+        if target == self._current[stage]:
             return None
-        old, self._current = self._current, target
+        old = self._current[stage]
+        self._current[stage] = target
         self.switch_log.append({
             "step": step,
+            "stage": stage,
             "ema_context": self._ema,
             "bucket": self.buckets.label(self.buckets.bucket(self._ema)),
             "from": old.name,

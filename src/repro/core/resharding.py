@@ -38,13 +38,22 @@ DEFAULT_RULES: Dict[str, Optional[str]] = {
 
 @dataclass(frozen=True)
 class MeshConfig:
-    """A named factorization of the device set into (pod, data, model)."""
+    """A named factorization of the device set into (pod, data, model).
+
+    ``device_offset`` carves the config's devices out of the *tail* of
+    the global device list starting at that index — two configs with
+    disjoint [offset, offset + n_devices) windows form disjoint submeshes
+    over one device set, which is how the async pipeline schedule places
+    the Rollout and Update stages on separate hardware
+    (``launch.mesh.rollout_trainer_split``).
+    """
 
     name: str
     dp: int
     tp: int
     pods: int = 1
     fsdp: bool = True          # shard "embed" dims over the data axis
+    device_offset: int = 0     # index into jax.devices() for submeshes
 
     @property
     def n_devices(self) -> int:
@@ -64,7 +73,12 @@ class MeshConfig:
     def make_mesh(self, devices: Optional[Sequence] = None) -> Mesh:
         if devices is None:
             devices = jax.devices()
-        devices = np.asarray(devices[: self.n_devices]).reshape(self.shape())
+        lo, hi = self.device_offset, self.device_offset + self.n_devices
+        if len(devices) < hi:
+            raise ValueError(
+                f"MeshConfig {self.name!r} wants devices [{lo}, {hi}) but "
+                f"only {len(devices)} are visible")
+        devices = np.asarray(devices[lo:hi]).reshape(self.shape())
         return Mesh(devices, self.axis_names())
 
 

@@ -1,0 +1,181 @@
+"""Pipeline schedules over the EARL stage graph (Fig. 2, pipelined).
+
+``PipelineSchedule`` runs ``EarlTrainer``'s four stages under one of two
+schedules:
+
+  - ``mode="sync"`` — the paper's baseline loop: Rollout → ExpPrep →
+    Dispatch → Update, strictly ordered, one step at a time. The trainer
+    mesh idles during decode and the rollout mesh idles during the
+    gradient step.
+
+  - ``mode="async"`` — one-step-off software pipelining (AgentRL /
+    AReaL-style): the Update stage for step k runs on a dedicated worker
+    thread (the trainer mesh) while the main thread rolls out step k+1
+    on the rollout mesh with *stale* params. Staleness is bounded by
+    ``max_policy_lag`` (L): Rollout(k) samples with params version
+    ``max(0, k - L)``, deterministically — fresher params are NOT picked
+    up opportunistically, so a run is reproducible and ``L = 0`` degrades
+    to the synchronous ordering bit-for-bit (tested) while still
+    exercising the pipeline machinery. The in-flight update queue depth
+    is bounded by the same L (the bounded staleness queue).
+
+Why a thread, not a second jax process: stage programs are dispatched
+asynchronously by XLA, so the worker's update execution and the main
+thread's rollout dispatch genuinely overlap — on a multi-host/submesh
+deployment each side drives its own device set (``rollout_trainer_split``
+places them on disjoint submeshes via ``MeshConfig.device_offset``), on
+the CPU smoke container they overlap host-side python with device
+compute. No ``jax.block_until_ready`` separates the stages: the handoff
+is the dispatcher's async entry point (the consumer is enqueued against
+the in-flight transfer) and the only host syncs are the rollout engine's
+per-turn scalar read and the deferred metrics read when a step's record
+is finalized.
+
+Off-policy correction: rolling out with stale params makes the sampled
+experience off-policy by up to L updates. Configure the trainer with
+``is_rho_max > 0`` so the Update stage reweights each token by the
+truncated importance-sampling ratio between current and behavior
+log-probs (``rl.algo.truncated_importance_weights``) — the recorded
+``StepRecord.is_weight_mean``/``policy_lag`` make the correction
+observable.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+
+def _print_record(rec) -> None:
+    print(f"step {rec.step:4d}  return {rec.mean_return:+.3f}  "
+          f"ctx {rec.mean_context_len:6.1f}  "
+          f"trunc {rec.truncated_frac:.2f}  "
+          f"loss {rec.loss:+.4f}  lag {rec.policy_lag}")
+
+
+@dataclass
+class PipelineSchedule:
+    """Runs the trainer's stage graph under a sync or async schedule."""
+
+    trainer: Any                      # EarlTrainer (stage container)
+    mode: str = "sync"                # "sync" | "async"
+    max_policy_lag: int = 1           # async: bounded staleness (L)
+
+    def run(self, n_steps: int, *, params, opt_state, ref_params=None,
+            dst_shardings=None, verbose: bool = False):
+        """Execute ``n_steps`` full pipeline iterations. Returns
+        ``(params, opt_state, history)`` like the original loop."""
+        if self.mode == "sync":
+            return self._run_sync(n_steps, params, opt_state, ref_params,
+                                  dst_shardings, verbose)
+        if self.mode == "async":
+            return self._run_async(n_steps, params, opt_state, ref_params,
+                                   dst_shardings, verbose)
+        raise ValueError(f"unknown pipeline mode {self.mode!r}")
+
+    # -- synchronous (Fig. 2 baseline) --------------------------------------
+    def _run_sync(self, n_steps, params, opt_state, ref_params,
+                  dst_shardings, verbose):
+        tr = self.trainer
+        for step in range(n_steps):
+            params, opt_state, rec = tr.run_step(
+                step, params, opt_state, ref_params,
+                dst_shardings=dst_shardings)
+            if verbose:
+                _print_record(rec)
+        return params, opt_state, tr.history
+
+    # -- asynchronous one-step-off pipeline ---------------------------------
+    def _run_async(self, n_steps, params, opt_state, ref_params,
+                   dst_shardings, verbose):
+        tr = self.trainer
+        L = max(0, int(self.max_policy_lag))
+        versions: Dict[int, Any] = {0: params}   # update count -> params
+        futures: Dict[int, Any] = {}             # step -> in-flight update
+        pending: Dict[int, dict] = {}            # step -> rollout-side row
+        # the worker owns the live (params, opt_state); single worker =>
+        # updates apply strictly in step order
+        state = {"params": params, "opt_state": opt_state}
+
+        def submit(pool, k, exp, src_shardings):
+            def work():
+                t0 = time.perf_counter()
+                handle = None
+                if dst_shardings is not None:
+                    exp_d, handle = tr.dispatch_stage(
+                        exp, dst_shardings, src_shardings=src_shardings,
+                        asynchronous=True)
+                else:
+                    exp_d = exp
+                p, o = state["params"], state["opt_state"]
+                p2, o2, metrics = tr.update_stage(p, o, exp_d)
+                state["params"], state["opt_state"] = p2, o2
+                dispatch_row = None
+                if handle is not None:
+                    # the update is enqueued against the in-flight
+                    # transfer; resolving the handle NOW (before the
+                    # update's own sync) stamps a wall time that covers
+                    # the transfer alone, not the overlapped compute
+                    _, rep = handle.result()
+                    dispatch_row = rep.row()
+                return (p2, o2, metrics, dispatch_row,
+                        time.perf_counter() - t0)
+            futures[k] = pool.submit(work)
+
+        def resolve(k):
+            """Finalize step k: wait for its update, publish the new
+            params version, record the step."""
+            p2, _, metrics, dispatch_row, upd_wall = \
+                futures.pop(k).result()
+            versions[k + 1] = p2
+            row = pending.pop(k)
+            rec = tr.make_record(
+                k, row["stats"], metrics, switch=row["switch"],
+                dispatch_row=dispatch_row,
+                wall_time_s=time.perf_counter() - row["t0"],
+                rollout_wall_s=row["rollout_wall_s"],
+                update_wall_s=upd_wall, policy_lag=row["policy_lag"])
+            if verbose:
+                _print_record(rec)
+
+        with ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="earl-update") as pool:
+            for k in range(n_steps):
+                v = max(0, k - L)            # behavior params version
+                # bounded staleness: wait for updates up to v-1 so the
+                # required version exists (in-flight queue depth <= L)
+                while v not in versions:
+                    resolve(min(futures))
+                behavior = versions[v]
+                # versions older than any future rollout can need are dead
+                for old in [x for x in versions if x < v]:
+                    del versions[old]
+
+                t0 = time.perf_counter()
+                exp, stats, switch = tr.rollout_stage(
+                    k, behavior, tr._next_rng(), tr.batch_size,
+                    n_episodes=tr.rollout_episodes, ref_params=ref_params,
+                    params_version=v)
+                exp = tr.expprep_stage(exp, ref_params=ref_params)
+                # capture the engine-reported source layout NOW — the
+                # next rollout overwrites it before the worker runs
+                src = (tr.dispatch_stage.source_shardings(exp)
+                       if dst_shardings is not None else None)
+                # update-stage selector hook: its config is *tracked*
+                # independently of the rollout stage's (both live at
+                # once); bookkeeping/switch-log only until the update
+                # program is rebound per MeshConfig (see run_step)
+                if tr.selector is not None and tr.selector.policy is not None:
+                    tr.selector.maybe_switch(k, stage="update")
+                pending[k] = {
+                    "stats": stats, "switch": switch, "t0": t0,
+                    "rollout_wall_s": time.perf_counter() - t0,
+                    "policy_lag": k - v,
+                }
+                submit(pool, k, exp, src)
+
+            while futures:                   # drain the pipeline
+                resolve(min(futures))
+
+        return state["params"], state["opt_state"], tr.history

@@ -1,18 +1,39 @@
-"""The EARL RL stage graph (paper Fig. 2).
+"""The EARL RL stage graph (paper Fig. 2), as explicit stage objects.
+
+Synchronous schedule (``pipeline="sync"``, the paper's baseline loop):
 
     ┌─► [selector hook ①] Rollout (policy decode, multi-turn env loop)
-    │        │ experience batch (tokens, logprobs, rewards, context stats)
-    │   [selector hook ②] Experience Preparation
-    │        │   reference log-probs (+ value / reward models when present)
-    │        │   advantage estimation (REINFORCE, paper §3.1)
+    │        │ experience batch (tokens, logprobs, REF logprobs, rewards)
+    │        │   — the reference pass is folded INTO the rollout
+    │        │     macro-step (in-graph ExpPrep, §3.3)
+    │   [selector hook ②] Experience Preparation (advantage estimation)
     │   [dispatcher ③④⑤]  layout-aware move to the Update layout
     │        ▼
     └── Model Update (policy-gradient step)
 
-``EarlTrainer`` wires the substrate (model, env, rollout engine, optimizer)
-to the two EARL components. Every stage transition is observable: per-step
+Asynchronous schedule (``pipeline="async"``, ``core/scheduler.py``):
+Rollout(k+1) on the rollout mesh overlaps Update(k) on the trainer mesh,
+one-step-off (bounded by ``max_policy_lag``):
+
+    rollout mesh:  RO(0)→EP(0) │ RO(1)→EP(1) │ RO(2)→EP(2) │ ...
+                        └─③④⑤──┐     └─③④⑤──┐     └─③④⑤──┐
+    trainer mesh:          UP(0)   │    UP(1)   │    UP(2) ...
+    params:        v0     v0 stale─┘   v1 stale─┘   v2 ...
+
+RO(k) samples with params version max(0, k - max_policy_lag) — stale by
+up to ``max_policy_lag`` updates — and the Update stage compensates with
+a truncated importance-sampling correction against the behavior
+log-probs (``rl.algo.truncated_importance_weights``, ``is_rho_max``).
+``max_policy_lag=0`` degenerates to the synchronous ordering (bitwise-
+identical training, tested), still exercising the pipeline machinery.
+
+The four stages are standalone callables (``RolloutStage``,
+``ExpPrepStage``, ``DispatchStage``, ``UpdateStage``) so a schedule can
+place them on different meshes/threads; ``EarlTrainer`` wires the
+substrate (model, env, rollout engine, optimizer) into them and remains
+the user-facing driver. Every stage transition stays observable: per-step
 ``StepRecord`` captures context-length growth (Fig. 1), selector switches
-(Fig. 3) and dispatch reports (Fig. 4).
+(Fig. 3), dispatch reports (Fig. 4), policy lag and paged-pool telemetry.
 """
 from __future__ import annotations
 
@@ -46,11 +67,174 @@ class StepRecord:
     selector_switch: Optional[dict] = None
     dispatch: Optional[dict] = None
     wall_time_s: float = 0.0
+    # async pipeline accounting: which params version generated the batch
+    # and how stale it was relative to the synchronous schedule
+    params_version: int = -1
+    policy_lag: int = 0
+    rollout_wall_s: float = 0.0
+    update_wall_s: float = 0.0
+    is_weight_mean: float = 0.0          # truncated-IS mean (1.0 on-policy)
+    # paged-pool telemetry (ROADMAP: exhaustion must not be silent)
+    pages_in_use: int = 0
+    page_capacity: int = 0
+    kv_dropped_writes: int = 0
 
+
+# ---------------------------------------------------------------------------
+# Stage implementations
+# ---------------------------------------------------------------------------
+
+class RolloutStage:
+    """Fig. 2 ① (+ the folded reference pass of ②) on the rollout mesh.
+
+    Runs the selector's rollout-stage hook, binds the compiled engine to
+    the stage's current MeshConfig, rolls out, and feeds the context-
+    length monitor. Returns ``(exp, stats, switch_row)``.
+    """
+
+    def __init__(self, engine, selector: Optional[ParallelismSelector] =
+                 None):
+        self.engine = engine
+        self.selector = selector
+
+    def __call__(self, step: int, params, rng, batch: int, *,
+                 n_episodes: Optional[int] = None, ref_params=None,
+                 params_version: int = -1):
+        switch = None
+        sel = self.selector
+        if sel is not None and sel.policy is not None:
+            sw = sel.maybe_switch(step, stage="rollout")
+            if sw is not None:
+                switch = {"from": sw[0].name, "to": sw[1].name,
+                          "ema_context": sel.ema_context}
+            # compiled engine: keep the generation program bound to the
+            # stage's current mesh. Checking every step (not just on a
+            # switch event) also covers selectors profiled *after* trainer
+            # construction; the compile cache is keyed by MeshConfig, so
+            # revisited configs reuse their program.
+            cur = sel.current_for("rollout")
+            if (hasattr(self.engine, "bind_mesh")
+                    and self.engine.mesh_config != cur):
+                self.engine.bind_mesh(cur)
+
+        exp, stats = self.engine.run(params, rng, batch,
+                                     n_episodes=n_episodes,
+                                     ref_params=ref_params,
+                                     params_version=params_version)
+        if sel is not None:
+            sel.observe(stats.mean_context_len)
+        return exp, stats, switch
+
+
+class ExpPrepStage:
+    """Fig. 2 ②: advantage estimation (+ reference-model fallback).
+
+    Both engines fold the reference log-prob pass into the rollout itself
+    (the ROADMAP "in-graph experience preparation" — the logits are
+    already on device during decode), so normally this stage is a cheap
+    advantage computation. The standalone ``make_ref_logprob_step``
+    program remains as a fallback for engines that did not fold it
+    (``ref_folded=False``).
+    """
+
+    def __init__(self, model, *, advantage: str = "reinforce",
+                 group_size: int = 4):
+        self.advantage = advantage
+        self.group_size = group_size
+        self._ref_step = jax.jit(make_ref_logprob_step(model))
+
+    def __call__(self, exp: ExperienceBatch, *, ref_params=None,
+                 ref_folded: bool = True) -> ExperienceBatch:
+        if ref_params is not None and not ref_folded:
+            exp = exp.with_(ref_logprobs=self._ref_step(ref_params,
+                                                        exp.tokens))
+        if self.advantage == "group":
+            adv = group_relative_advantages(exp.rewards, self.group_size)
+        else:
+            adv = reinforce_advantages(exp.rewards)
+        return exp.with_(advantages=adv)
+
+
+class DispatchStage:
+    """Fig. 2 ③④⑤: layout-aware move to the Update layout.
+
+    The compiled engine reports the true device layout of the harvested
+    batch (``experience_shardings``), so the movement plan starts from
+    real src_shardings instead of inferring them. ``asynchronous=True``
+    uses the dispatcher's async handoff: the transfer is enqueued and the
+    returned batch can feed the Update program immediately while the host
+    launches the next rollout (the report handle is resolved later).
+    """
+
+    def __init__(self, dispatcher: DataDispatcher, engine=None, *,
+                 strategy: str = "direct"):
+        self.dispatcher = dispatcher
+        self.engine = engine
+        self.strategy = strategy
+
+    def source_shardings(self, exp: ExperienceBatch):
+        """Engine-reported layout, refreshed for the leaves ExpPrep
+        replaced after the engine recorded the rollout layout."""
+        src = getattr(self.engine, "experience_shardings", None)
+        if src is None:
+            return None
+        return src._replace(ref_logprobs=exp.ref_logprobs.sharding,
+                            advantages=exp.advantages.sharding)
+
+    def __call__(self, exp: ExperienceBatch, dst_shardings, *,
+                 src_shardings=None, asynchronous: bool = False):
+        """Returns ``(exp, report_row_or_handle)``; (exp, None) when no
+        dst_shardings were requested."""
+        if dst_shardings is None:
+            return exp, None
+        if src_shardings is None:
+            src_shardings = self.source_shardings(exp)
+        if asynchronous:
+            handle = self.dispatcher.dispatch_async(
+                exp, dst_shardings, strategy=self.strategy,
+                src_shardings=src_shardings)
+            return handle.batch, handle
+        exp, rep = self.dispatcher.dispatch(
+            exp, dst_shardings, strategy=self.strategy,
+            src_shardings=src_shardings)
+        return exp, rep.row()
+
+
+class UpdateStage:
+    """Fig. 2 Model Update: the policy-gradient step on the trainer mesh.
+
+    The jitted program donates ``opt_state`` (dead after the step — the
+    donated in-flight buffer of the pipeline). ``params`` is deliberately
+    NOT donated: under the async schedule the rollout mesh is still
+    reading the same buffers as the behavior policy while the update
+    runs. ``is_rho_max > 0`` arms the truncated importance-sampling
+    correction for stale-params experience.
+    """
+
+    def __init__(self, model, optimizer: Optimizer, *,
+                 clip_eps: float = 0.0, kl_coef: float = 0.0,
+                 is_rho_max: float = 0.0):
+        self._step = jax.jit(
+            make_rl_train_step(model, optimizer, clip_eps=clip_eps,
+                               kl_coef=kl_coef, is_rho_max=is_rho_max),
+            donate_argnums=(1,))
+
+    def __call__(self, params, opt_state, exp: ExperienceBatch):
+        return self._step(params, opt_state, exp)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
 
 @dataclass
 class EarlTrainer:
-    """End-to-end agentic RL driver implementing the Fig. 2 loop."""
+    """End-to-end agentic RL driver wiring the Fig. 2 stage graph.
+
+    ``pipeline="sync"`` runs the stages back-to-back per step;
+    ``pipeline="async"`` hands them to ``core.scheduler.PipelineSchedule``
+    which overlaps Rollout(k+1) with Update(k) under ``max_policy_lag``.
+    """
 
     model: Any                              # repro.models.Model
     env: Any
@@ -72,6 +256,9 @@ class EarlTrainer:
     cache_layout: str = "dense"             # compiled: "dense" | "paged"
     page_size: int = 16                     # paged: tokens per KV page
     cache_pages: Optional[int] = None       # paged: pool size (None = full)
+    pipeline: str = "sync"                  # "sync" | "async"
+    max_policy_lag: int = 1                 # async: bounded staleness
+    is_rho_max: float = 0.0                 # truncated-IS cap (0 = off)
     seed: int = 0
 
     history: List[StepRecord] = field(default_factory=list)
@@ -79,6 +266,7 @@ class EarlTrainer:
     def __post_init__(self):
         self.optimizer = self.optimizer or adamw(3e-4, weight_decay=0.0)
         self.dispatcher = self.dispatcher or DataDispatcher()
+        assert self.pipeline in ("sync", "async"), self.pipeline
         kw = dict(max_turns=self.max_turns,
                   max_turn_tokens=self.max_turn_tokens,
                   max_context=self.max_context, temperature=self.temperature)
@@ -106,10 +294,16 @@ class EarlTrainer:
         else:
             raise ValueError(
                 f"unknown rollout_backend {self.rollout_backend!r}")
-        self._ref_step = jax.jit(make_ref_logprob_step(self.model))
-        self._train_step = jax.jit(make_rl_train_step(
+
+        self.rollout_stage = RolloutStage(self.rollout, self.selector)
+        self.expprep_stage = ExpPrepStage(
+            self.model, advantage=self.advantage,
+            group_size=self.group_size)
+        self.dispatch_stage = DispatchStage(
+            self.dispatcher, self.rollout, strategy=self.dispatch_strategy)
+        self.update_stage = UpdateStage(
             self.model, self.optimizer, clip_eps=self.clip_eps,
-            kl_coef=self.kl_coef))
+            kl_coef=self.kl_coef, is_rho_max=self.is_rho_max)
         self._rng = jax.random.PRNGKey(self.seed)
 
     # ------------------------------------------------------------------
@@ -124,73 +318,12 @@ class EarlTrainer:
         self._rng, sub = jax.random.split(self._rng)
         return sub
 
-    # ------------------------------------------------------------------
-    def run_step(self, step: int, params, opt_state, ref_params=None,
-                 dst_shardings=None):
-        """One full Fig. 2 iteration. Returns (params, opt_state, record)."""
-        t0 = time.perf_counter()
-
-        # [hook ①] — selector may re-configure parallelism before Rollout
-        switch = None
-        if self.selector is not None and self.selector.policy is not None:
-            sw = self.selector.maybe_switch(step)
-            if sw is not None:
-                switch = {"from": sw[0].name, "to": sw[1].name,
-                          "ema_context": self.selector.ema_context}
-            # compiled engine: keep the generation program bound to the
-            # selector's current mesh. Checking every step (not just on a
-            # switch event) also covers selectors profiled *after* trainer
-            # construction; the compile cache is keyed by MeshConfig, so
-            # revisited configs reuse their program.
-            if (hasattr(self.rollout, "bind_mesh")
-                    and self.rollout.mesh_config != self.selector.current):
-                self.rollout.bind_mesh(self.selector.current)
-
-        # ① Rollout (both engines share the run signature; n_episodes >
-        # batch_size engages the compiled engine's slot refill)
-        exp, stats = self.rollout.run(params, self._next_rng(),
-                                      self.batch_size,
-                                      n_episodes=self.rollout_episodes)
-
-        # feed the monitor (the paper's "averaged context length")
-        if self.selector is not None:
-            self.selector.observe(stats.mean_context_len)
-
-        # [hook ②] + ② Experience Preparation
-        kl = 0.0
-        if ref_params is not None:
-            ref_lp = self._ref_step(ref_params, exp.tokens)
-            exp = exp.with_(ref_logprobs=ref_lp)
-        if self.advantage == "group":
-            adv = group_relative_advantages(exp.rewards, self.group_size)
-        else:
-            adv = reinforce_advantages(exp.rewards)
-        exp = exp.with_(advantages=adv)
-
-        # ③④⑤ Dispatch to the Update layout. The compiled engine reports
-        # the true device layout of the harvested batch, so the movement
-        # plan starts from real src_shardings instead of inferring them.
-        dispatch_row = None
-        if dst_shardings is not None:
-            src_shardings = getattr(self.rollout, "experience_shardings",
-                                    None)
-            if src_shardings is not None:
-                # ExpPrep replaced these leaves after the engine recorded
-                # the rollout layout — refresh them so the movement plan
-                # describes the batch actually being dispatched
-                src_shardings = src_shardings._replace(
-                    ref_logprobs=exp.ref_logprobs.sharding,
-                    advantages=exp.advantages.sharding)
-            exp, rep = self.dispatcher.dispatch(
-                exp, dst_shardings, strategy=self.dispatch_strategy,
-                src_shardings=src_shardings)
-            dispatch_row = rep.row()
-
-        # Model Update
-        params, opt_state, metrics = self._train_step(params, opt_state, exp)
-        if "kl" in metrics:
-            kl = float(metrics["kl"])
-
+    def make_record(self, step: int, stats: RolloutStats, metrics,
+                    *, switch=None, dispatch_row=None, wall_time_s=0.0,
+                    rollout_wall_s=0.0, update_wall_s=0.0,
+                    policy_lag: int = 0) -> StepRecord:
+        """Assemble the per-step observability row (shared by the sync
+        path and the async scheduler)."""
         rec = StepRecord(
             step=step,
             mean_return=stats.mean_return,
@@ -198,25 +331,77 @@ class EarlTrainer:
             mean_turn_len=stats.mean_turn_len,
             truncated_frac=float(np.mean(stats.truncated)),
             loss=float(metrics["loss"]),
-            kl=kl,
+            kl=float(metrics.get("kl", 0.0)),
             selector_switch=switch,
             dispatch=dispatch_row,
-            wall_time_s=time.perf_counter() - t0,
+            wall_time_s=wall_time_s,
+            params_version=stats.params_version,
+            policy_lag=policy_lag,
+            rollout_wall_s=rollout_wall_s,
+            update_wall_s=update_wall_s,
+            is_weight_mean=float(metrics.get("is_weight_mean", 0.0)),
+            pages_in_use=stats.pages_in_use,
+            page_capacity=stats.page_capacity,
+            kv_dropped_writes=stats.kv_dropped_writes,
         )
         self.history.append(rec)
+        return rec
+
+    # ------------------------------------------------------------------
+    def run_step(self, step: int, params, opt_state, ref_params=None,
+                 dst_shardings=None):
+        """One full Fig. 2 iteration, synchronously: Rollout → ExpPrep →
+        Dispatch → Update. Returns (params, opt_state, record)."""
+        t0 = time.perf_counter()
+
+        # ① Rollout (+ folded ref pass). Both engines share the run
+        # signature; n_episodes > batch_size engages slot refill.
+        exp, stats, switch = self.rollout_stage(
+            step, params, self._next_rng(), self.batch_size,
+            n_episodes=self.rollout_episodes, ref_params=ref_params,
+            params_version=step)
+        t_roll = time.perf_counter() - t0
+
+        # ② Experience Preparation (advantages; ref already folded)
+        exp = self.expprep_stage(exp, ref_params=ref_params)
+
+        # ③④⑤ Dispatch to the Update layout
+        exp, dispatch_row = self.dispatch_stage(exp, dst_shardings)
+
+        # Model Update. The selector's update-stage config is *tracked*
+        # independently of the rollout stage's (the async schedule needs
+        # both alive at once); today it is bookkeeping/switch-log only —
+        # the update program is a single jit that GSPMD places from its
+        # input shardings, and rebinding it per MeshConfig is the
+        # ROADMAP submesh-split follow-on.
+        if self.selector is not None and self.selector.policy is not None:
+            self.selector.maybe_switch(step, stage="update")
+        t1 = time.perf_counter()
+        params, opt_state, metrics = self.update_stage(params, opt_state,
+                                                       exp)
+        loss = float(metrics["loss"])        # blocks: sync schedule
+        del loss
+        rec = self.make_record(
+            step, stats, metrics, switch=switch, dispatch_row=dispatch_row,
+            wall_time_s=time.perf_counter() - t0, rollout_wall_s=t_roll,
+            update_wall_s=time.perf_counter() - t1, policy_lag=0)
         return params, opt_state, rec
 
     # ------------------------------------------------------------------
     def train(self, n_steps: int, *, params=None, opt_state=None,
-              ref_params=None, verbose: bool = False):
+              ref_params=None, dst_shardings=None, verbose: bool = False):
+        """Train for ``n_steps`` under the configured pipeline schedule.
+
+        ``dst_shardings`` (an ``ExperienceBatch`` of ``NamedSharding``)
+        routes every step's batch through the Data Dispatcher to the
+        Update layout — threaded through to ``run_step``/the scheduler so
+        the dispatcher path is reachable from the public entry point.
+        """
+        from repro.core.scheduler import PipelineSchedule
         if params is None:
             params, opt_state, ref_params = self.init_state()
-        for step in range(n_steps):
-            params, opt_state, rec = self.run_step(
-                step, params, opt_state, ref_params)
-            if verbose:
-                print(f"step {rec.step:4d}  return {rec.mean_return:+.3f}  "
-                      f"ctx {rec.mean_context_len:6.1f}  "
-                      f"trunc {rec.truncated_frac:.2f}  "
-                      f"loss {rec.loss:+.4f}")
-        return params, opt_state, self.history
+        sched = PipelineSchedule(self, mode=self.pipeline,
+                                 max_policy_lag=self.max_policy_lag)
+        return sched.run(n_steps, params=params, opt_state=opt_state,
+                         ref_params=ref_params, dst_shardings=dst_shardings,
+                         verbose=verbose)

@@ -100,13 +100,20 @@ def make_lm_train_step(model, optimizer: Optimizer, *, attn_impl="xla",
 
 
 def make_rl_train_step(model, optimizer: Optimizer, *, clip_eps: float = 0.0,
-                       kl_coef: float = 0.0, attn_impl="xla"):
+                       kl_coef: float = 0.0, is_rho_max: float = 0.0,
+                       attn_impl="xla"):
     """The Model Update stage program (Fig. 2, after dispatch ⑤).
 
     Consumes an ``ExperienceBatch`` whose ``advantages`` /
     ``ref_logprobs`` were produced by the ExpPrep stage and moved here by
     the Data Dispatcher. Predictions at position t score token t+1, so all
     per-token tensors are shifted off by one inside.
+
+    ``is_rho_max > 0`` enables the truncated importance-sampling
+    correction against the *behavior* log-probs the rollout engine
+    recorded at sample time — required for stability when the async
+    pipeline schedule trains on experience from stale params
+    (``core/scheduler.py``, one-step-off policy lag).
     """
 
     def train_step(params, opt_state, batch: ExperienceBatch, extra=None):
@@ -117,9 +124,11 @@ def make_rl_train_step(model, optimizer: Optimizer, *, clip_eps: float = 0.0,
             mask = batch.loss_mask[:, 1:]
             old_lp = batch.logprobs[:, 1:] if clip_eps > 0 else None
             ref_lp = batch.ref_logprobs[:, 1:] if kl_coef > 0 else None
+            beh_lp = batch.logprobs[:, 1:] if is_rho_max > 0 else None
             loss, metrics = policy_gradient_loss(
                 lp, batch.advantages, mask, old_logprobs=old_lp,
-                clip_eps=clip_eps, ref_logprobs=ref_lp, kl_coef=kl_coef)
+                clip_eps=clip_eps, ref_logprobs=ref_lp, kl_coef=kl_coef,
+                behavior_logprobs=beh_lp, is_rho_max=is_rho_max)
             if "aux_loss" in aux:
                 loss = loss + aux["aux_loss"]
                 metrics["aux_loss"] = aux["aux_loss"]

@@ -48,6 +48,47 @@ def production_mesh_config(*, multi_pod: bool = False) -> MeshConfig:
                       dp=16, tp=16, pods=2 if multi_pod else 1)
 
 
+def rollout_trainer_split(*, n_devices: Optional[int] = None,
+                          rollout_frac: float = 0.5,
+                          rollout_tp: int = 1, trainer_tp: int = 1
+                          ) -> Tuple[MeshConfig, MeshConfig]:
+    """Partition the visible devices into disjoint (rollout, trainer)
+    submeshes for the async pipeline schedule: Rollout(k+1) decodes on
+    the first submesh while Update(k) backprops on the second, joined by
+    the dispatcher's layout-aware handoff (``core/scheduler.py``).
+
+    ``rollout_frac`` splits the device count (the paper's Tab. 1 rollout
+    share is the guide: decode-heavy workloads want the larger slice);
+    each side is factored as dp × tp with the requested TP degree —
+    clamped down to the side's device share so each config's
+    [offset, offset + dp*tp) window stays inside its slice and the two
+    windows NEVER overlap (the disjointness invariant the async schedule
+    depends on). Per-side leftover devices stay idle rather than
+    aborting the run.
+
+    Degenerate single-device hosts (the CPU smoke container) place both
+    stages on device 0 — the schedule still overlaps host-side work and
+    XLA execution, it just shares the compute. A warning-free, valid
+    config is always returned.
+    """
+    n = n_devices if n_devices is not None else len(jax.devices())
+    if n <= 1:
+        cfg = lambda nm: MeshConfig(nm, dp=1, tp=1, device_offset=0)
+        return cfg("rollout-0"), cfg("trainer-0")
+    n_roll = min(max(int(round(n * rollout_frac)), 1), n - 1)
+    n_train = n - n_roll
+
+    def side(name: str, n_side: int, tp: int, offset: int) -> MeshConfig:
+        tp = min(max(tp, 1), n_side)         # tp cannot exceed the share
+        dp = n_side // tp
+        return MeshConfig(f"{name}-{dp}x{tp}", dp=dp, tp=tp,
+                          device_offset=offset)
+
+    rollout = side("rollout", n_roll, rollout_tp, 0)
+    trainer = side("trainer", n_train, trainer_tp, n_roll)
+    return rollout, trainer
+
+
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

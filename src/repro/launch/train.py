@@ -4,9 +4,12 @@
         --arch qwen2-0.5b --env tictactoe --steps 50 --batch 16
 
 Runs the full EARL system on the available devices: multi-turn rollouts,
-experience preparation with a frozen reference model, layout-aware
-dispatch, policy-gradient update, with the Parallelism Selector monitoring
-context growth (on CPU the selector profiles via the compiled cost model).
+experience preparation with a frozen reference model (folded into the
+rollout macro-step), layout-aware dispatch, policy-gradient update, with
+the Parallelism Selector monitoring context growth (on CPU the selector
+profiles via the compiled cost model). ``--pipeline async`` overlaps
+Rollout(k+1) with Update(k) one-step-off (``core/scheduler.py``), with
+the truncated importance-sampling correction armed via ``--is-rho-max``.
 Writes a JSONL training log usable by benchmarks/bench_context_growth.
 """
 from __future__ import annotations
@@ -53,6 +56,18 @@ def main(argv=None):
                     help="paged layout: pool size in pages (default: full "
                          "per-slot provisioning batch*ceil(ctx/page); pass "
                          "less to cap memory at expected live tokens)")
+    ap.add_argument("--pipeline", default="sync",
+                    choices=["sync", "async"],
+                    help="async = overlap Rollout(k+1) with Update(k) "
+                         "across the rollout/trainer meshes (one-step-off "
+                         "policy lag, bounded by --max-policy-lag)")
+    ap.add_argument("--max-policy-lag", type=int, default=1,
+                    help="async pipeline: max params-version staleness of "
+                         "rollout experience (0 = sync-equivalent order)")
+    ap.add_argument("--is-rho-max", type=float, default=2.0,
+                    help="truncated importance-sampling cap for stale-"
+                         "params experience (0 disables; only applied "
+                         "when > 0)")
     ap.add_argument("--max-turns", type=int, default=3)
     ap.add_argument("--max-turn-tokens", type=int, default=6)
     ap.add_argument("--max-context", type=int, default=160)
@@ -91,15 +106,22 @@ def main(argv=None):
         advantage=args.advantage, rollout_backend=args.rollout_backend,
         rollout_episodes=args.rollout_episodes,
         cache_layout=args.cache_layout, page_size=args.page_size,
-        cache_pages=args.cache_pages, seed=args.seed)
+        cache_pages=args.cache_pages, pipeline=args.pipeline,
+        max_policy_lag=args.max_policy_lag,
+        # lag 0 experience is on-policy: arming the correction there
+        # would only inject decode-vs-forward fp noise into the weights
+        # and break the documented sync-equivalence of lag-0 async runs
+        is_rho_max=(args.is_rho_max if args.pipeline == "async"
+                    and args.max_policy_lag > 0 else 0.0),
+        seed=args.seed)
 
-    params, opt_state, ref_params = trainer.init_state()
-    log_path = Path(args.log)
     t0 = time.time()
+    params, opt_state, history = trainer.train(args.steps, verbose=True)
+    wall = time.time() - t0
+
+    log_path = Path(args.log)
     with log_path.open("w") as f:
-        for step in range(args.steps):
-            params, opt_state, rec = trainer.run_step(
-                step, params, opt_state, ref_params)
+        for rec in history:
             row = {
                 "step": rec.step,
                 "return": rec.mean_return,
@@ -109,15 +131,16 @@ def main(argv=None):
                 "loss": rec.loss,
                 "kl": rec.kl,
                 "wall_s": rec.wall_time_s,
+                "params_version": rec.params_version,
+                "policy_lag": rec.policy_lag,
+                "is_weight_mean": rec.is_weight_mean,
+                "pages_in_use": rec.pages_in_use,
+                "kv_dropped_writes": rec.kv_dropped_writes,
             }
             f.write(json.dumps(row) + "\n")
-            print(f"step {step:4d}  return {rec.mean_return:+.3f}  "
-                  f"ctx {rec.mean_context_len:6.1f}  "
-                  f"turn {rec.mean_turn_len:4.1f}  "
-                  f"trunc {rec.truncated_frac:.2f}  "
-                  f"loss {rec.loss:+.4f}  kl {rec.kl:.4f}")
-    print(f"done: {args.steps} steps in {time.time() - t0:.1f}s "
-          f"-> {log_path}")
+    print(f"done: {args.steps} steps in {wall:.1f}s "
+          f"({args.steps / max(wall, 1e-9):.2f} steps/s, "
+          f"pipeline={args.pipeline}) -> {log_path}")
     return 0
 
 

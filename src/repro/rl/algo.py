@@ -72,10 +72,34 @@ def returns_to_go(step_rewards, gamma: float = 1.0):
     return jnp.flip(rtg.T, axis=1)
 
 
+def truncated_importance_weights(logprobs, behavior_logprobs, *,
+                                 rho_max: float = 2.0):
+    """Per-token truncated importance-sampling weights for one-step-off
+    asynchronous training (AReaL/AgentRL-style decoupled correction).
+
+    The async pipeline rolls out step k+1 with the params of step k, so
+    the behavior policy that *sampled* the tokens lags the policy being
+    updated. The REINFORCE estimator stays unbiased-ish under that lag by
+    reweighting each token with min(pi_current/pi_behavior, rho_max) — the
+    truncation bounds the variance a large ratio would inject (Ionides'
+    truncated IS). The weight is a ``stop_gradient`` multiplier: it
+    corrects the *estimator*, it is not part of the surrogate objective
+    (that is PPO-clip's job, which composes with this when both are on).
+
+    logprobs: (B,T) current-policy log-probs of the taken tokens.
+    behavior_logprobs: (B,T) log-probs recorded by the rollout engine at
+    sample time (``ExperienceBatch.logprobs``).
+    Returns (B,T) weights in [0, rho_max].
+    """
+    d = jax.lax.stop_gradient(logprobs) - behavior_logprobs
+    return jnp.clip(jnp.exp(d), 0.0, rho_max)
+
+
 def policy_gradient_loss(logprobs, advantages, gen_mask, *,
                          old_logprobs=None, clip_eps: float = 0.0,
                          ref_logprobs=None, kl_coef: float = 0.0,
-                         entropy_logits=None, entropy_coef: float = 0.0):
+                         entropy_logits=None, entropy_coef: float = 0.0,
+                         behavior_logprobs=None, is_rho_max: float = 0.0):
     """Masked token-level policy-gradient loss.
 
     logprobs: (B,T) current-policy log-probs of the taken tokens.
@@ -83,6 +107,9 @@ def policy_gradient_loss(logprobs, advantages, gen_mask, *,
     gen_mask: (B,T) float/bool — 1 where the policy generated the token.
     old_logprobs + clip_eps>0 -> PPO clipped surrogate; else REINFORCE.
     ref_logprobs + kl_coef>0 -> k3 KL penalty against the reference model.
+    behavior_logprobs + is_rho_max>0 -> truncated importance-sampling
+    correction for off-policy (stale-params) experience, see
+    ``truncated_importance_weights``.
     Returns (loss, metrics dict).
     """
     mask = gen_mask.astype(jnp.float32)
@@ -92,6 +119,13 @@ def policy_gradient_loss(logprobs, advantages, gen_mask, *,
     adv = jax.lax.stop_gradient(advantages.astype(jnp.float32))
 
     metrics = {}
+    if behavior_logprobs is not None and is_rho_max > 0.0:
+        w = truncated_importance_weights(logprobs, behavior_logprobs,
+                                         rho_max=is_rho_max)
+        adv = adv * w
+        metrics["is_weight_mean"] = jnp.sum(w * mask) / denom
+        metrics["is_trunc_frac"] = jnp.sum(
+            (w >= is_rho_max) * mask) / denom
     if old_logprobs is not None and clip_eps > 0.0:
         ratio = jnp.exp(logprobs - jax.lax.stop_gradient(old_logprobs))
         unclipped = ratio * adv

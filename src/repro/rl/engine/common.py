@@ -43,6 +43,18 @@ class RolloutStats:
     mean_return: float = 0.0
     episodes_started: int = 0       # slot engine: episodes reset into slots
     episodes_returned: int = 0      # slot engine: episodes harvested
+    # which params produced this batch: the trainer's update counter at
+    # rollout launch. The async pipeline schedule rolls out step k+1 on
+    # the params of step k, so version < step — the recorded difference
+    # is the *actual* policy lag the IS correction must absorb.
+    params_version: int = -1        # -1 = caller did not tag
+    # paged-pool telemetry (0/0/0 for dense layouts): peak pages allocated
+    # during the rollout, pool capacity, and KV writes dropped because the
+    # pool was exhausted (each dropped write is a token whose K/V never
+    # entered the cache — the episode silently lost context)
+    pages_in_use: int = 0           # peak pool occupancy over the rollout
+    page_capacity: int = 0          # pool size in pages
+    kv_dropped_writes: int = 0      # tokens whose KV write was dropped
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +109,16 @@ def fallback_actions(actions, last_tok, active, acted, n_actions: int):
 # Sampling
 # ---------------------------------------------------------------------------
 
+def token_lp(logits, tokens):
+    """(B, V) logits + (B,) token ids -> (B,) f32 log p(token).
+
+    The single-position wrapper over ``algo.token_logprobs`` (vocab-shard
+    friendly one-hot contraction) shared by sampling and the in-graph
+    reference-model pass."""
+    lg = jnp.asarray(logits).astype(jnp.float32)
+    return token_logprobs(lg[:, None, :], jnp.asarray(tokens)[:, None])[:, 0]
+
+
 def sample_tokens(rng, logits, temperature: float):
     """Sample next tokens from (B, V) logits. Returns (tokens, logprobs).
 
@@ -110,8 +132,7 @@ def sample_tokens(rng, logits, temperature: float):
     else:
         lg = lg / temperature
         tok = jax.random.categorical(rng, lg, axis=-1).astype(jnp.int32)
-    lp = token_logprobs(lg[:, None, :], tok[:, None])[:, 0]
-    return tok, lp
+    return tok, token_lp(lg, tok)
 
 
 # ---------------------------------------------------------------------------
@@ -119,7 +140,10 @@ def sample_tokens(rng, logits, temperature: float):
 # ---------------------------------------------------------------------------
 
 def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
-              episodes_started: int, episodes_returned: int) -> RolloutStats:
+              episodes_started: int, episodes_returned: int,
+              params_version: int = -1, pages_in_use: int = 0,
+              page_capacity: int = 0,
+              kv_dropped_writes: int = 0) -> RolloutStats:
     turn_lengths = np.asarray(turn_lengths)
     context_lengths = np.asarray(context_lengths)
     tl = turn_lengths[turn_lengths > 0]
@@ -133,4 +157,8 @@ def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
         mean_return=float(np.asarray(rewards).mean()),
         episodes_started=int(episodes_started),
         episodes_returned=int(episodes_returned),
+        params_version=int(params_version),
+        pages_in_use=int(pages_in_use),
+        page_capacity=int(page_capacity),
+        kv_dropped_writes=int(kv_dropped_writes),
     )

@@ -15,22 +15,36 @@ episodes-returned counter) instead of once per *token* — the python-loop
 reference (``rl/rollout.py``) pays a device round-trip per decoded token,
 which is the dominant overhead this engine removes.
 
+**In-graph experience preparation** (``ref_params`` passed to ``run``):
+the frozen reference model decodes the *same* token stream as the policy
+inside the macro-step — one extra model evaluation per fed token, with
+its own dense decode cache — and the per-token reference log-probs are
+harvested alongside the behavior log-probs. ExpPrep then never re-runs a
+forward pass over the full harvested context (paper §3.3: the tensor is
+produced where the tokens already live, ready for the dispatcher).
+
 Mesh integration (selector hook ①): the macro-step program is compiled
-**per MeshConfig** (cache keyed by ``(mesh_config, B, N)``) with the slot
-carry's batch leaves bound to the mesh's (pod, data) axes and the KV cache
-laid out by ``launch.mesh.cache_shardings``; ``bind_mesh`` re-binds the
-engine when the Parallelism Selector switches, re-using previously
-compiled programs for revisited configs. The env transition runs under
-``shard_map`` when the data axis is >1 (envs are row-wise pure ``jnp``,
-so each shard steps its rows locally with a per-shard rng). Model compute
-itself is partitioned by GSPMD through the in/out shardings + the
-activation constraints in ``models/layers.py`` — manually ``shard_map``-ing
-the transformer body would drop the TP psum GSPMD inserts after the
-attention/MLP output projections.
+**per MeshConfig** (cache keyed by ``(mesh_config, B, N, with_ref)``)
+with the slot carry's batch leaves bound to the mesh's (pod, data) axes
+and the KV cache laid out by ``launch.mesh.cache_shardings``;
+``bind_mesh`` re-binds the engine when the Parallelism Selector switches,
+re-using previously compiled programs for revisited configs. The env
+transition runs under ``shard_map`` when the data axis is >1 (envs are
+row-wise pure ``jnp``, so each shard steps its rows locally with a
+per-shard rng). Model compute itself is partitioned by GSPMD through the
+in/out shardings + the activation constraints in ``models/layers.py`` —
+manually ``shard_map``-ing the transformer body would drop the TP psum
+GSPMD inserts after the attention/MLP output projections.
 
 The harvested ``ExperienceBatch`` leaves keep the compiled out-shardings,
 so ``EarlTrainer`` hands the Data Dispatcher a *real* ``src_shardings``
 (``experience_shardings``) instead of inferring the source layout.
+
+Telemetry: ``run(..., params_version=k)`` tags the resulting
+``RolloutStats`` with the params version that generated the batch (the
+async pipeline schedule's policy-lag accounting), and paged layouts
+report peak pool occupancy + dropped KV writes instead of dropping
+writes silently (``RolloutStats.pages_in_use`` / ``kv_dropped_writes``).
 """
 from __future__ import annotations
 
@@ -114,7 +128,7 @@ class CompiledRolloutEngine:
         self.page_size = page_size
         self.cache_pages = cache_pages      # None = full provisioning
         self._mesh_config = mesh_config
-        self._compiled: Dict[Tuple[Any, int, int], Any] = {}
+        self._compiled: Dict[Tuple[Any, int, int, bool], Any] = {}
         # real source layout of the last harvested batch (Data Dispatcher
         # src_shardings — see EarlTrainer.run_step)
         self.experience_shardings: Optional[ExperienceBatch] = None
@@ -133,13 +147,15 @@ class CompiledRolloutEngine:
         self._mesh_config = mesh_config
 
     # -- compiled macro-step ------------------------------------------------
-    def _build_turn_step(self, B: int, N: int):
+    def _build_turn_step(self, B: int, N: int, with_ref: bool):
         model, env = self.model, self.env
         T, olen = self.max_context, self.env.obs_len
         n_actions = env.n_actions
         mtt, mturns = self.max_turn_tokens, self.max_turns
         temperature = self.temperature
         attn_impl = self.attn_impl
+        paged = self.cache_layout == "paged"
+        page_size = self.page_size
         env_step = self._make_env_step(B)
         # envs usually declare reset_rows; the shared row-wise blend is
         # the fallback so a missing method isn't a runtime footgun
@@ -149,36 +165,65 @@ class CompiledRolloutEngine:
                                                         mask))
         rows = jnp.arange(B)
 
-        def feed_obs(decode, logits, cache, tokens, pos, obs, mask):
-            """Teacher-force obs columns into ``mask`` rows (scan)."""
+        def ref_score(ref_logits, tok, mask, pos):
+            """Reference log-prob of ``tok`` from the pre-advance ref
+            logits; 0 at position 0 (no prediction for the first token,
+            matching ``make_ref_logprob_step``)."""
+            lp = common.token_lp(ref_logits, tok)
+            return jnp.where(mask & (pos > 0), lp, 0.0)
+
+        def feed_obs(decode, ref_decode, logits, cache, ref_logits,
+                     ref_cache, tokens, ref_lp_buf, pos, obs, mask):
+            """Teacher-force obs columns into ``mask`` rows (scan). The
+            reference model (when folded in) consumes the same columns and
+            scores each before advancing."""
 
             def body(carry, col):
-                logits, cache, tokens, pos = carry
+                (logits, cache, ref_logits, ref_cache, tokens,
+                 ref_lp_buf, pos) = carry
                 col = jnp.where(mask, col, TOK_PAD).astype(jnp.int32)
                 cidx = jnp.where(mask, pos, T)           # OOB write -> drop
                 tokens = tokens.at[rows, cidx].set(col, mode="drop")
+                if ref_decode is not None:
+                    rlp = ref_score(ref_logits, col, mask, pos)
+                    ref_lp_buf = ref_lp_buf.at[rows, cidx].set(
+                        rlp, mode="drop")
+                    (ref_logits, ref_cache), _ = ref_decode(
+                        (ref_logits, ref_cache), (col, mask))
                 (logits, cache), _ = decode((logits, cache), (col, mask))
                 pos = pos + mask.astype(jnp.int32)
-                return (logits, cache, tokens, pos), None
+                return (logits, cache, ref_logits, ref_cache, tokens,
+                        ref_lp_buf, pos), None
 
             cols = jnp.swapaxes(jnp.asarray(obs, jnp.int32), 0, 1)
-            (logits, cache, tokens, pos), _ = lax.scan(
-                body, (logits, cache, tokens, pos), cols)
-            return logits, cache, tokens, pos
+            (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
+             pos), _ = lax.scan(
+                body, (logits, cache, ref_logits, ref_cache, tokens,
+                       ref_lp_buf, pos), cols)
+            return (logits, cache, ref_logits, ref_cache, tokens,
+                    ref_lp_buf, pos)
 
-        def gen_turn(decode, logits, cache, tokens, gen_mask, logprobs, pos,
-                     active, krngs):
+        def gen_turn(decode, ref_decode, logits, cache, ref_logits,
+                     ref_cache, tokens, gen_mask, logprobs, ref_lp_buf,
+                     pos, active, krngs):
             """One turn of generation: scan over ``mtt`` decode steps."""
 
             def body(carry, krng):
-                (logits, cache, tokens, gen_mask, logprobs, pos, acted,
-                 actions, last_tok, tl) = carry
+                (logits, cache, ref_logits, ref_cache, tokens, gen_mask,
+                 logprobs, ref_lp_buf, pos, acted, actions, last_tok,
+                 tl) = carry
                 write = ~acted
                 tok, lp = common.sample_tokens(krng, logits, temperature)
                 cidx = jnp.where(write, pos, T)          # OOB write -> drop
                 tokens = tokens.at[rows, cidx].set(tok, mode="drop")
                 gen_mask = gen_mask.at[rows, cidx].set(True, mode="drop")
                 logprobs = logprobs.at[rows, cidx].set(lp, mode="drop")
+                if ref_decode is not None:
+                    rlp = ref_score(ref_logits, tok, write, pos)
+                    ref_lp_buf = ref_lp_buf.at[rows, cidx].set(
+                        rlp, mode="drop")
+                    (ref_logits, ref_cache), _ = ref_decode(
+                        (ref_logits, ref_cache), (tok, write))
                 pos = pos + write.astype(jnp.int32)
                 tl = tl + write.astype(jnp.int32)
                 last_tok = jnp.where(write, tok, last_tok)
@@ -186,31 +231,40 @@ class CompiledRolloutEngine:
                 actions = jnp.where(newly, tok - ACTION_BASE, actions)
                 acted = acted | newly
                 (logits, cache), _ = decode((logits, cache), (tok, write))
-                return (logits, cache, tokens, gen_mask, logprobs, pos,
-                        acted, actions, last_tok, tl), None
+                return (logits, cache, ref_logits, ref_cache, tokens,
+                        gen_mask, logprobs, ref_lp_buf, pos, acted,
+                        actions, last_tok, tl), None
 
             zeros = jnp.zeros((B,), jnp.int32)
-            init = (logits, cache, tokens, gen_mask, logprobs, pos,
-                    ~active, zeros, zeros, zeros)
+            init = (logits, cache, ref_logits, ref_cache, tokens, gen_mask,
+                    logprobs, ref_lp_buf, pos, ~active, zeros, zeros, zeros)
             out, _ = lax.scan(body, init, krngs)
             return out
 
-        def init_feed(params, carry: slots.SlotCarry):
+        def init_feed(params, ref_params, carry: slots.SlotCarry):
             """Feed the initial observation of every live slot (the
             engine's "prefill", run once before the macro-step loop)."""
             decode = model.decode_scan_body(params, attn_impl=attn_impl)
+            ref_decode = (model.decode_scan_body(ref_params)
+                          if with_ref else None)
             obs = env.encode_obs(carry.env_state)
-            logits, cache, tokens, pos = feed_obs(
-                decode, carry.logits, carry.cache, carry.tokens, carry.pos,
-                obs, carry.live)
+            (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
+             pos) = feed_obs(
+                decode, ref_decode, carry.logits, carry.cache,
+                carry.ref_logits, carry.ref_cache, carry.tokens,
+                carry.ref_logprobs, carry.pos, obs, carry.live)
             return carry._replace(logits=logits, cache=cache,
-                                  tokens=tokens, pos=pos)
+                                  ref_logits=ref_logits,
+                                  ref_cache=ref_cache, tokens=tokens,
+                                  ref_logprobs=ref_lp_buf, pos=pos)
 
-        def turn_step(params, carry: slots.SlotCarry, trng):
+        def turn_step(params, ref_params, carry: slots.SlotCarry, trng):
             # invariant: every live slot's observation is already fed (by
             # init_feed or the previous step's combined feed), so the turn
             # starts generating immediately
             decode = model.decode_scan_body(params, attn_impl=attn_impl)
+            ref_decode = (model.decode_scan_body(ref_params)
+                          if with_ref else None)
             c = carry
 
             # 1. truncation / active set (same predicate as the reference)
@@ -223,10 +277,26 @@ class CompiledRolloutEngine:
             #    engine)
             krngs = jax.vmap(lambda t: common.sample_rng(trng, t))(
                 jnp.arange(mtt))
-            (logits, cache, tokens, gen_mask, logprobs, pos, acted,
-             actions, last_tok, tl) = gen_turn(
-                decode, c.logits, c.cache, c.tokens, c.gen_mask,
-                c.logprobs, c.pos, active, krngs)
+            (logits, cache, ref_logits, ref_cache, tokens, gen_mask,
+             logprobs, ref_lp_buf, pos, acted, actions, last_tok,
+             tl) = gen_turn(
+                decode, ref_decode, c.logits, c.cache, c.ref_logits,
+                c.ref_cache, c.tokens, c.gen_mask, c.logprobs,
+                c.ref_logprobs, c.pos, active, krngs)
+
+            # 2b. paged-pool telemetry, measured post-generation (peak
+            #     occupancy: finished slots have not released yet). The
+            #     dropped-write counter accumulates per-slot shortfall
+            #     *growth* so recovery-mapped pages never un-count a drop.
+            pages_peak, kv_dropped, kv_shortfall = (
+                c.pages_peak, c.kv_dropped, c.kv_shortfall)
+            if paged:
+                occ, _ = paging.pool_stats(cache)
+                pages_peak = jnp.maximum(pages_peak, occ)
+                drop_now = paging.dropped_tokens(cache, page_size)
+                kv_dropped = kv_dropped + jnp.sum(
+                    jnp.maximum(drop_now - kv_shortfall, 0))
+                kv_shortfall = drop_now
 
             # 3. action fallback + turn accounting
             actions = common.fallback_actions(actions, last_tok, active,
@@ -252,6 +322,7 @@ class CompiledRolloutEngine:
             store = slots.harvest(
                 c.store, finished=finished, episode=c.episode,
                 tokens=tokens, gen_mask=gen_mask, logprobs=logprobs,
+                ref_logprobs=ref_lp_buf if with_ref else None,
                 rewards=rewards_row, pos=pos, truncated=truncated,
                 n_turns=n_turns, turn_lengths=turn_lengths)
             returned = c.returned + jnp.sum(finished.astype(jnp.int32))
@@ -265,22 +336,27 @@ class CompiledRolloutEngine:
             rrng = common.reset_rng(trng)
 
             def do_reset(args):
-                cache, tokens, gen_mask, logprobs, pos, n_turns, tls, \
-                    state = args
+                cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf, \
+                    pos, n_turns, tls, shortfall, state = args
                 return (_reset_cache_rows(cache, refill),
+                        (_reset_cache_rows(ref_cache, refill)
+                         if with_ref else ref_cache),
                         jnp.where(r1, TOK_PAD, tokens),
                         jnp.where(r1, False, gen_mask),
                         jnp.where(r1, 0.0, logprobs),
+                        (jnp.where(r1, 0.0, ref_lp_buf)
+                         if with_ref else ref_lp_buf),
                         jnp.where(refill, 0, pos),
                         jnp.where(refill, 0, n_turns),
                         jnp.where(r1, 0, tls),
+                        jnp.where(refill, 0, shortfall),
                         reset_rows(rrng, state, refill))
 
-            (cache, tokens, gen_mask, logprobs, pos, n_turns,
-             turn_lengths, state3) = lax.cond(
+            (cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf,
+             pos, n_turns, turn_lengths, kv_shortfall, state3) = lax.cond(
                 jnp.any(refill), do_reset, lambda args: args,
-                (cache, tokens, gen_mask, logprobs, pos, n_turns,
-                 turn_lengths, state2))
+                (cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf,
+                 pos, n_turns, turn_lengths, kv_shortfall, state2))
 
             # 7. ONE combined obs feed: continuing rows teacher-force the
             #    env observation, refilled rows their reset observation —
@@ -291,15 +367,19 @@ class CompiledRolloutEngine:
             feed_mask = cont | refill
 
             def do_feed(args):
-                logits, cache, tokens, pos = args
+                (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
+                 pos) = args
                 obs = jnp.where(r1, env.encode_obs(state3),
                                 jnp.asarray(res.obs_tokens))
-                return feed_obs(decode, logits, cache, tokens, pos, obs,
-                                feed_mask)
+                return feed_obs(decode, ref_decode, logits, cache,
+                                ref_logits, ref_cache, tokens, ref_lp_buf,
+                                pos, obs, feed_mask)
 
-            logits, cache, tokens, pos = lax.cond(
+            (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
+             pos) = lax.cond(
                 jnp.any(feed_mask), do_feed, lambda args: args,
-                (logits, cache, tokens, pos))
+                (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
+                 pos))
 
             return slots.SlotCarry(
                 cache=cache,
@@ -318,6 +398,12 @@ class CompiledRolloutEngine:
                 launched=launched,
                 returned=returned,
                 store=store,
+                ref_cache=ref_cache,
+                ref_logits=ref_logits,
+                ref_logprobs=ref_lp_buf,
+                pages_peak=pages_peak,
+                kv_dropped=kv_dropped,
+                kv_shortfall=kv_shortfall,
             )
 
         return init_feed, turn_step
@@ -346,38 +432,39 @@ class CompiledRolloutEngine:
                          out_specs=(P("data"), P("data")))
 
     # -- compile cache ------------------------------------------------------
-    def _get_compiled(self, B: int, N: int):
-        key = (self._mesh_config, B, N)
+    def _get_compiled(self, B: int, N: int, with_ref: bool):
+        key = (self._mesh_config, B, N, with_ref)
         fn = self._compiled.get(key)
         if fn is None:
-            fn = self._compile(B, N)
+            fn = self._compile(B, N, with_ref)
             self._compiled[key] = fn
         return fn
 
-    def _compile(self, B: int, N: int):
-        init_feed, turn_step = self._build_turn_step(B, N)
+    def _compile(self, B: int, N: int, with_ref: bool):
+        init_feed, turn_step = self._build_turn_step(B, N, with_ref)
         if self._mesh_config is None:
-            return (jax.jit(init_feed, donate_argnums=(1,)),
-                    jax.jit(turn_step, donate_argnums=(1,)))
+            return (jax.jit(init_feed, donate_argnums=(2,)),
+                    jax.jit(turn_step, donate_argnums=(2,)))
 
         mesh = self._mesh_config.make_mesh()
-        carry_sh = self._carry_shardings(mesh, B, N)
-        jf_init = jax.jit(init_feed, in_shardings=(None, carry_sh),
-                          out_shardings=carry_sh, donate_argnums=(1,))
-        jf_turn = jax.jit(turn_step, in_shardings=(None, carry_sh, None),
-                          out_shardings=carry_sh, donate_argnums=(1,))
+        carry_sh = self._carry_shardings(mesh, B, N, with_ref)
+        jf_init = jax.jit(init_feed, in_shardings=(None, None, carry_sh),
+                          out_shardings=carry_sh, donate_argnums=(2,))
+        jf_turn = jax.jit(turn_step,
+                          in_shardings=(None, None, carry_sh, None),
+                          out_shardings=carry_sh, donate_argnums=(2,))
 
-        def call_init(params, carry):
+        def call_init(params, ref_params, carry):
             with mesh:                       # anchor layers.constrain
-                return jf_init(params, carry)
+                return jf_init(params, ref_params, carry)
 
-        def call_turn(params, carry, trng):
+        def call_turn(params, ref_params, carry, trng):
             with mesh:
-                return jf_turn(params, carry, trng)
+                return jf_turn(params, ref_params, carry, trng)
 
         return call_init, call_turn
 
-    def _carry_shardings(self, mesh, B: int, N: int):
+    def _carry_shardings(self, mesh, B: int, N: int, with_ref: bool):
         """Batch leaves over (pod, data); KV cache by the production cache
         rules; scalars replicated."""
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -386,12 +473,13 @@ class CompiledRolloutEngine:
         rep = NamedSharding(mesh, P())
         bs = lambda leaf: _batch_spec(mesh, leaf.shape)
         carry_abs = jax.eval_shape(
-            lambda: self._init_carry(jax.random.PRNGKey(0), B, N))
+            lambda: self._init_carry(jax.random.PRNGKey(0), B, N, with_ref))
         batched = lambda tree: jax.tree.map(bs, tree)
+        csh = lambda c: cache_shardings(
+            c, mesh, seq_len=self.max_context,
+            n_kv_heads=self.model.cfg.n_kv_heads)
         return slots.SlotCarry(
-            cache=cache_shardings(carry_abs.cache, mesh,
-                                  seq_len=self.max_context,
-                                  n_kv_heads=self.model.cfg.n_kv_heads),
+            cache=csh(carry_abs.cache),
             logits=bs(carry_abs.logits),
             env_state=batched(carry_abs.env_state),
             tokens=bs(carry_abs.tokens),
@@ -406,10 +494,17 @@ class CompiledRolloutEngine:
             launched=rep,
             returned=rep,
             store=batched(carry_abs.store),
+            ref_cache=csh(carry_abs.ref_cache) if with_ref else None,
+            ref_logits=bs(carry_abs.ref_logits) if with_ref else None,
+            ref_logprobs=bs(carry_abs.ref_logprobs) if with_ref else None,
+            pages_peak=rep,
+            kv_dropped=rep,
+            kv_shortfall=bs(carry_abs.kv_shortfall),
         )
 
     # -- carry init ---------------------------------------------------------
-    def _init_carry(self, rng, B: int, N: int) -> slots.SlotCarry:
+    def _init_carry(self, rng, B: int, N: int,
+                    with_ref: bool = False) -> slots.SlotCarry:
         env, model = self.env, self.model
         T = self.max_context
         state = env.reset(rng, B)
@@ -436,39 +531,59 @@ class CompiledRolloutEngine:
             launched=jnp.asarray(min(B, N), jnp.int32),
             returned=jnp.asarray(0, jnp.int32),
             store=slots.init_store(N, T, self.max_turns),
+            # the reference decode cache is always dense: it exists for
+            # one rollout and its footprint is the policy's dense cost —
+            # pool sizing stays a policy-cache-only concern
+            ref_cache=model.init_cache(B, T) if with_ref else None,
+            ref_logits=(jnp.zeros((B, model.cfg.vocab_size), jnp.float32)
+                        if with_ref else None),
+            ref_logprobs=(jnp.zeros((B, T), jnp.float32)
+                          if with_ref else None),
+            pages_peak=jnp.asarray(0, jnp.int32),
+            kv_dropped=jnp.asarray(0, jnp.int32),
+            kv_shortfall=jnp.zeros((B,), jnp.int32),
         )
 
     # ------------------------------------------------------------------
     def run(self, params, rng, batch: int, *, n_episodes: Optional[int] =
-            None, extra=None):
+            None, extra=None, ref_params=None, params_version: int = -1):
         """Roll out ``n_episodes`` (default: ``batch``) episodes over
-        ``batch`` device slots. Returns (ExperienceBatch, RolloutStats)."""
+        ``batch`` device slots. Returns (ExperienceBatch, RolloutStats).
+
+        ``ref_params`` folds the reference-model log-prob pass into the
+        macro-step (in-graph ExpPrep); ``params_version`` tags the stats
+        with the update counter of ``params`` for policy-lag accounting.
+        """
         del extra
         B = int(batch)
         N = int(n_episodes) if n_episodes is not None else B
         assert N >= 1 and B >= 1
+        with_ref = ref_params is not None
 
-        init_fn, turn_fn = self._get_compiled(B, N)
-        carry = init_fn(params, self._init_carry(rng, B, N))
+        init_fn, turn_fn = self._get_compiled(B, N, with_ref)
+        carry = init_fn(params, ref_params,
+                        self._init_carry(rng, B, N, with_ref))
         base = jax.random.fold_in(rng, 1)
 
         # worst case: every wave of B episodes uses its full turn budget
         max_macro = self.max_turns * math.ceil(N / B) + 2
         for m in range(max_macro):
-            carry = turn_fn(params, carry, common.turn_rng(base, m))
+            carry = turn_fn(params, ref_params, carry,
+                            common.turn_rng(base, m))
             if int(carry.returned) >= N:     # ONE host sync per turn
                 break
 
-        return self._finalize(carry, N)
+        return self._finalize(carry, N, params_version)
 
-    def _finalize(self, carry: slots.SlotCarry, N: int):
+    def _finalize(self, carry: slots.SlotCarry, N: int,
+                  params_version: int = -1):
         store = carry.store
         exp = ExperienceBatch(
             tokens=store.tokens,
             gen_mask=store.gen_mask,
             loss_mask=store.gen_mask,
             logprobs=store.logprobs,
-            ref_logprobs=jnp.zeros_like(store.logprobs),
+            ref_logprobs=store.ref_logprobs,
             rewards=store.rewards,
             returns=store.rewards,
             advantages=reinforce_advantages(store.rewards),
@@ -480,9 +595,14 @@ class CompiledRolloutEngine:
         # real src_shardings
         self.experience_shardings = ExperienceBatch(
             *(x.sharding for x in exp))
+        paged = paging.is_paged(carry.cache)
         stats = common.summarize(
             store.turn_lengths, store.context_len, store.n_turns,
             store.truncated, store.rewards,
             episodes_started=int(carry.launched),
-            episodes_returned=int(carry.returned))
+            episodes_returned=int(carry.returned),
+            params_version=params_version,
+            pages_in_use=int(carry.pages_peak),
+            page_capacity=carry.cache.free.shape[0] if paged else 0,
+            kv_dropped_writes=int(carry.kv_dropped))
         return exp, stats

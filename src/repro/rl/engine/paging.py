@@ -49,3 +49,23 @@ def release_slot_pages(cache, refill):
 def pool_stats(cache):
     """(pages_in_use, n_pages) for occupancy telemetry."""
     return paging.pages_in_use(cache.free), cache.free.shape[0]
+
+
+def dropped_tokens(cache, page_size: int):
+    """(B,) int32 — tokens per slot whose KV write was dropped because the
+    pool was exhausted at allocation time.
+
+    Token ``t`` of a slot lives in block-table entry ``t // page_size``;
+    the write landed iff that entry is mapped. Per entry ``k`` the slot
+    has ``clip(pos - k*page_size, 0, page_size)`` tokens in range, so the
+    shortfall is ``pos - sum(covered over mapped entries)`` — exact even
+    when recovery mapped pages mid-row (unmapped holes keep counting).
+    Pure ``jnp``; runs inside the compiled macro-step for the
+    ``RolloutStats`` dropped-write counter.
+    """
+    bt = jnp.asarray(cache.block_table)                      # (B, NP)
+    pos = jnp.asarray(cache.pos).astype(jnp.int32)           # (B,)
+    k = jnp.arange(bt.shape[1], dtype=jnp.int32) * page_size  # (NP,)
+    in_range = jnp.clip(pos[:, None] - k[None, :], 0, page_size)
+    covered = jnp.sum(jnp.where(bt >= 0, in_range, 0), axis=1)
+    return pos - covered

@@ -32,6 +32,7 @@ class EpisodeStore(NamedTuple):
     tokens: jax.Array          # (N, T) int32
     gen_mask: jax.Array        # (N, T) bool
     logprobs: jax.Array        # (N, T) f32
+    ref_logprobs: jax.Array    # (N, T) f32 (in-graph ExpPrep; 0 when off)
     rewards: jax.Array         # (N,)   f32 (0 for truncated episodes)
     context_len: jax.Array     # (N,)   int32
     truncated: jax.Array       # (N,)   bool
@@ -64,6 +65,17 @@ class SlotCarry(NamedTuple):
     launched: jax.Array        # () int32 — episodes started (reset into slots)
     returned: jax.Array        # () int32 — episodes harvested
     store: EpisodeStore
+    # in-graph experience preparation (None/zeros when no ref model): the
+    # frozen reference model decodes the same token stream as the policy
+    # inside the macro-step, so ExpPrep never re-runs a full-context
+    # forward pass after the rollout (ROADMAP "in-graph ExpPrep")
+    ref_cache: Any = None      # reference-model decode cache (dense)
+    ref_logits: Any = None     # (B, V) ref logits (next-token distribution)
+    ref_logprobs: Any = None   # (B, T) f32 ref log-probs of fed tokens
+    # paged-pool telemetry (scalars; zeros for dense layouts)
+    pages_peak: Any = None     # () int32 peak pool occupancy
+    kv_dropped: Any = None     # () int32 cumulative dropped KV writes
+    kv_shortfall: Any = None   # (B,) int32 current per-slot dropped tokens
 
 
 def init_store(n_episodes: int, max_context: int,
@@ -73,6 +85,7 @@ def init_store(n_episodes: int, max_context: int,
         tokens=jnp.zeros((N, T), jnp.int32),
         gen_mask=jnp.zeros((N, T), bool),
         logprobs=jnp.zeros((N, T), jnp.float32),
+        ref_logprobs=jnp.zeros((N, T), jnp.float32),
         rewards=jnp.zeros((N,), jnp.float32),
         context_len=jnp.zeros((N,), jnp.int32),
         truncated=jnp.zeros((N,), bool),
@@ -83,7 +96,7 @@ def init_store(n_episodes: int, max_context: int,
 
 def harvest(store: EpisodeStore, *, finished, episode, tokens, gen_mask,
             logprobs, rewards, pos, truncated, n_turns,
-            turn_lengths) -> EpisodeStore:
+            turn_lengths, ref_logprobs=None) -> EpisodeStore:
     """Scatter finished slot rows into the store at their episode id.
 
     Rows with ``finished=False`` are pointed at row ``N`` and dropped by
@@ -100,6 +113,8 @@ def harvest(store: EpisodeStore, *, finished, episode, tokens, gen_mask,
         tokens=put(store.tokens, tokens),
         gen_mask=put(store.gen_mask, gen_mask),
         logprobs=put(store.logprobs, logprobs),
+        ref_logprobs=(put(store.ref_logprobs, ref_logprobs)
+                      if ref_logprobs is not None else store.ref_logprobs),
         rewards=put(store.rewards, rewards),
         context_len=put(store.context_len, pos),
         truncated=put(store.truncated, truncated),

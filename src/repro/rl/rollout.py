@@ -49,13 +49,23 @@ class RolloutEngine:
         self._prefill = jax.jit(
             lambda p, toks, cache: self.model.prefill(p, toks, cache))
 
+        # reference-model pass for signature parity with the compiled
+        # engine's in-graph fold; the python path is the semantic
+        # reference, so it reuses the canonical ExpPrep stage program
+        # (import deferred: repro.core's package init imports this module)
+        from repro.core.train_step import make_ref_logprob_step
+        self._ref_lp = jax.jit(make_ref_logprob_step(self.model))
+
     # ------------------------------------------------------------------
-    def run(self, params, rng, batch: int, *, n_episodes=None, extra=None):
+    def run(self, params, rng, batch: int, *, n_episodes=None, extra=None,
+            ref_params=None, params_version: int = -1):
         """Roll out ``batch`` episodes. Returns (ExperienceBatch, stats).
 
         ``n_episodes`` exists for signature parity with the compiled
         engine; the python loop has no slot refill, so it must equal
-        ``batch`` (or be None)."""
+        ``batch`` (or be None). ``ref_params`` fills
+        ``exp.ref_logprobs`` (the compiled engine folds the same pass
+        into its macro-step); ``params_version`` tags the stats."""
         if n_episodes is not None and n_episodes != batch:
             raise ValueError(
                 "the python reference engine has no slot refill; use "
@@ -166,12 +176,22 @@ class RolloutEngine:
         # truncated episodes: zero reward (the Fig. 1 "low-quality data")
         rewards = np.where(truncated, 0.0, rewards)
 
+        ref_logprobs = jnp.zeros((B, T), jnp.float32)
+        if ref_params is not None:
+            # match the compiled fold's convention: values only at fed
+            # positions 1..pos-1, zero elsewhere (PAD tail excluded)
+            fed = ((np.arange(T)[None, :] >= 1)
+                   & (np.arange(T)[None, :] < pos[:, None]))
+            ref_logprobs = jnp.asarray(np.where(
+                fed, np.asarray(self._ref_lp(ref_params,
+                                             jnp.asarray(tokens))), 0.0))
+
         exp = ExperienceBatch(
             tokens=jnp.asarray(tokens),
             gen_mask=jnp.asarray(gen_mask),
             loss_mask=jnp.asarray(gen_mask),
             logprobs=jnp.asarray(logprobs),
-            ref_logprobs=jnp.zeros((B, T), jnp.float32),
+            ref_logprobs=ref_logprobs,
             rewards=jnp.asarray(rewards),
             returns=jnp.asarray(rewards),
             advantages=jnp.asarray(reinforce_advantages(jnp.asarray(rewards))),
@@ -180,5 +200,6 @@ class RolloutEngine:
         )
         stats = common.summarize(
             turn_lengths, pos.copy(), n_turns, truncated, rewards,
-            episodes_started=B, episodes_returned=B)
+            episodes_started=B, episodes_returned=B,
+            params_version=params_version)
         return exp, stats

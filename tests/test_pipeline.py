@@ -1,0 +1,370 @@
+"""Async stage-pipeline tests: sync/async numerical parity, one-step-off
+learning under the truncated-IS correction, params-version tagging,
+paged-pool telemetry, per-stage selector configs, and the async handoff.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.stages import EarlTrainer
+from repro.optim.adamw import adamw
+from repro.rl.envs import make_env
+from repro.rl.envs.bandit import BanditState, MultiArmedBandit
+
+
+@pytest.fixture(scope="module")
+def model():
+    from repro.configs.base import get_smoke_config
+    from repro.models.registry import build_model
+    return build_model(get_smoke_config("qwen2-0.5b"))
+
+
+def _trainer(model, env_name="bandit", *, pipeline="sync", lag=0,
+             backend="compiled", env=None, **kw):
+    base = dict(batch_size=4, max_turns=1, max_turn_tokens=2,
+                max_context=32, seed=0)
+    base.update(kw)
+    return EarlTrainer(model=model, env=env or make_env(env_name),
+                       optimizer=adamw(1e-3, weight_decay=0.0),
+                       rollout_backend=backend, pipeline=pipeline,
+                       max_policy_lag=lag, **base)
+
+
+class TestSyncAsyncParity:
+    """``async`` with ``max_policy_lag=0`` must reproduce the synchronous
+    schedule exactly: same rng order, same params version per step, only
+    the execution is routed through the pipeline machinery (worker
+    thread, async dispatch path)."""
+
+    @pytest.mark.parametrize("env_name,backend,env_kw", [
+        ("bandit", "compiled", dict(max_turns=1, max_turn_tokens=2,
+                                    max_context=32)),
+        ("tictactoe", "python", dict(max_turns=2, max_turn_tokens=4,
+                                     max_context=64)),
+    ])
+    def test_lag0_matches_sync(self, model, env_name, backend, env_kw):
+        n = 3
+        ts = _trainer(model, env_name, pipeline="sync", backend=backend,
+                      **env_kw)
+        ps, _, hs = ts.train(n)
+        ta = _trainer(model, env_name, pipeline="async", lag=0,
+                      backend=backend, **env_kw)
+        pa, _, ha = ta.train(n)
+        assert [r.step for r in ha] == list(range(n))
+        for a, b in zip(hs, ha):
+            assert a.loss == pytest.approx(b.loss, abs=1e-7)
+            assert a.mean_return == pytest.approx(b.mean_return)
+            assert a.params_version == b.params_version
+        for la, lb in zip(jax.tree.leaves(ps), jax.tree.leaves(pa)):
+            np.testing.assert_array_equal(np.asarray(la, np.float32),
+                                          np.asarray(lb, np.float32))
+
+    def test_async_history_in_step_order(self, model):
+        tr = _trainer(model, pipeline="async", lag=1, is_rho_max=2.0)
+        _, _, hist = tr.train(5)
+        assert [r.step for r in hist] == list(range(5))
+
+
+class FixedBestArmBandit(MultiArmedBandit):
+    """Arm 0 pays +1 w.p. 0.95, every other arm w.p. 0.05, constant
+    across episodes — "always pull arm 0" is a strongly learnable policy
+    (random play scores ~-0.56, arm 0 scores +0.9)."""
+
+    jit_safe = True
+
+    def reset(self, rng, batch: int) -> BanditState:
+        means = jnp.full((batch, self.n_arms), 0.05).at[:, 0].set(0.95)
+        hints = jnp.clip((means * self.obs_levels).astype(jnp.int32),
+                         0, self.obs_levels - 1)
+        return BanditState(means=means, hints=hints,
+                           done=jnp.zeros((batch,), bool),
+                           reward=jnp.zeros((batch,), jnp.float32))
+
+
+class TestOneStepOffLearning:
+    def test_lag1_is_corrected_update_improves_return(self, model):
+        """One-step-off training on stale params, with the truncated-IS
+        correction armed, must still climb the (easy) bandit: mean return
+        over the last 5 steps beats the first 5 by a wide margin."""
+        tr = EarlTrainer(model=model, env=FixedBestArmBandit(),
+                         optimizer=adamw(3e-3, weight_decay=0.0),
+                         batch_size=32, max_turns=1, max_turn_tokens=2,
+                         max_context=32, clip_eps=0.2,
+                         rollout_backend="compiled", pipeline="async",
+                         max_policy_lag=1, is_rho_max=2.0, seed=0)
+        _, _, hist = tr.train(25)
+        rets = np.array([r.mean_return for r in hist])
+        early, late = rets[:5].mean(), rets[-5:].mean()
+        assert late - early > 0.3, (early, late, rets)
+        # the experience really was off-policy: lag recorded, IS weights
+        # moved off 1.0 at least once after warmup
+        assert max(r.policy_lag for r in hist) == 1
+        w = [r.is_weight_mean for r in hist[1:]]
+        assert any(abs(x - 1.0) > 1e-4 for x in w), w
+
+
+class TestParamsVersionTagging:
+    def test_async_lag1_versions(self, model):
+        tr = _trainer(model, pipeline="async", lag=1, is_rho_max=2.0)
+        _, _, hist = tr.train(4)
+        assert [r.params_version for r in hist] == [0, 0, 1, 2]
+        assert [r.policy_lag for r in hist] == [0, 1, 1, 1]
+
+    def test_sync_versions_track_step(self, model):
+        tr = _trainer(model, pipeline="sync")
+        _, _, hist = tr.train(3)
+        assert [r.params_version for r in hist] == [0, 1, 2]
+        assert all(r.policy_lag == 0 for r in hist)
+
+    def test_engine_stats_carry_version(self, model):
+        from repro.rl.engine import CompiledRolloutEngine
+        eng = CompiledRolloutEngine(model, make_env("bandit"), max_turns=1,
+                                    max_turn_tokens=2, max_context=32)
+        params = model.init(jax.random.PRNGKey(0))
+        _, stats = eng.run(params, jax.random.PRNGKey(1), 2,
+                           params_version=7)
+        assert stats.params_version == 7
+        _, stats = eng.run(params, jax.random.PRNGKey(1), 2)
+        assert stats.params_version == -1          # untagged default
+
+
+class TestTruncatedIS:
+    def test_on_policy_weights_are_one(self):
+        from repro.rl.algo import truncated_importance_weights
+        lp = jnp.array([[-1.0, -2.0, -0.5]])
+        w = truncated_importance_weights(lp, lp, rho_max=2.0)
+        np.testing.assert_allclose(np.asarray(w), 1.0, atol=1e-6)
+
+    def test_weights_truncated_at_rho_max(self):
+        from repro.rl.algo import truncated_importance_weights
+        lp_cur = jnp.array([[0.0]])
+        lp_beh = jnp.array([[-5.0]])       # raw ratio e^5 >> cap
+        w = truncated_importance_weights(lp_cur, lp_beh, rho_max=2.0)
+        assert float(w[0, 0]) == pytest.approx(2.0)
+
+    def test_loss_metrics_and_gradient_scaling(self):
+        """The IS weight scales the REINFORCE gradient but carries no
+        gradient itself (stop-gradient estimator correction)."""
+        from repro.rl.algo import policy_gradient_loss
+        lp = jnp.array([[-0.7]])
+        beh = jnp.array([[-0.2]])          # ratio e^-0.5 ~ 0.61
+        adv = jnp.array([1.0])
+        mask = jnp.ones((1, 1))
+
+        def loss_at(l, b=None, rho=0.0):
+            loss, m = policy_gradient_loss(l, adv, mask,
+                                           behavior_logprobs=b,
+                                           is_rho_max=rho)
+            return loss, m
+
+        base, _ = loss_at(lp)
+        corr, m = loss_at(lp, beh, 2.0)
+        w = float(np.exp(-0.5))
+        assert float(corr) == pytest.approx(float(base) * w, rel=1e-5)
+        assert m["is_weight_mean"] == pytest.approx(w, rel=1e-5)
+        assert m["is_trunc_frac"] == pytest.approx(0.0)
+        g_base = jax.grad(lambda l: loss_at(l)[0])(lp)
+        g_corr = jax.grad(lambda l: loss_at(l, beh, 2.0)[0])(lp)
+        np.testing.assert_allclose(np.asarray(g_corr),
+                                   np.asarray(g_base) * w, rtol=1e-5)
+
+
+class TestInGraphExpPrep:
+    def test_folded_ref_matches_standalone_program(self, model):
+        """The reference log-probs harvested inside the rollout macro-step
+        must match ``make_ref_logprob_step`` run over the harvested
+        contexts (at fed positions; 0 elsewhere by convention)."""
+        from repro.core.train_step import make_ref_logprob_step
+        from repro.rl.engine import CompiledRolloutEngine
+        params = model.init(jax.random.PRNGKey(0))
+        ref_params = model.init(jax.random.PRNGKey(7))
+        eng = CompiledRolloutEngine(model, make_env("tictactoe"),
+                                    max_turns=2, max_turn_tokens=4,
+                                    max_context=64, temperature=0.0)
+        exp, _ = eng.run(params, jax.random.PRNGKey(42), 4,
+                         ref_params=ref_params)
+        full = np.asarray(jax.jit(make_ref_logprob_step(model))(
+            ref_params, exp.tokens))
+        T = exp.tokens.shape[1]
+        pos = np.asarray(exp.context_len)
+        fed = ((np.arange(T)[None, :] >= 1)
+               & (np.arange(T)[None, :] < pos[:, None]))
+        got = np.asarray(exp.ref_logprobs)
+        np.testing.assert_allclose(got[fed], full[fed], atol=1e-4,
+                                   rtol=1e-3)
+        assert (got[~fed] == 0).all()
+
+    def test_python_engine_ref_parity(self, model):
+        from repro.rl.rollout import RolloutEngine
+        params = model.init(jax.random.PRNGKey(0))
+        ref_params = model.init(jax.random.PRNGKey(7))
+        eng = RolloutEngine(model, make_env("tictactoe"), max_turns=2,
+                            max_turn_tokens=4, max_context=64,
+                            temperature=0.0)
+        e1, _ = eng.run(params, jax.random.PRNGKey(42), 4,
+                        ref_params=ref_params)
+        assert float(np.abs(np.asarray(e1.ref_logprobs)).sum()) > 0
+
+
+class TestPagedPoolTelemetry:
+    def test_exhaustion_counts_dropped_writes(self, model):
+        from repro.rl.engine import CompiledRolloutEngine
+        params = model.init(jax.random.PRNGKey(0))
+        env = make_env("bandit")
+        kw = dict(max_turns=1, max_turn_tokens=2, max_context=32,
+                  temperature=1.0, cache_layout="paged", page_size=8)
+        ample = CompiledRolloutEngine(model, env, **kw)
+        _, st = ample.run(params, jax.random.PRNGKey(9), 3, n_episodes=8)
+        assert st.kv_dropped_writes == 0
+        assert 0 < st.pages_in_use <= st.page_capacity
+        starved = CompiledRolloutEngine(model, env, cache_pages=2, **kw)
+        _, st2 = starved.run(params, jax.random.PRNGKey(9), 3,
+                             n_episodes=8)
+        assert st2.page_capacity == 2
+        assert st2.kv_dropped_writes > 0        # no longer silent
+        assert st2.pages_in_use <= st2.page_capacity
+
+    def test_step_record_emits_pool_telemetry(self, model):
+        tr = _trainer(model, cache_layout="paged", page_size=8,
+                      cache_pages=2, batch_size=3)
+        _, _, hist = tr.train(1)
+        rec = hist[0]
+        assert rec.page_capacity == 2
+        assert rec.kv_dropped_writes > 0
+        assert rec.pages_in_use <= rec.page_capacity
+
+    def test_dropped_tokens_exact(self):
+        from types import SimpleNamespace
+        from repro.rl.engine.paging import dropped_tokens
+        cache = SimpleNamespace(
+            block_table=jnp.array([[0, 1], [2, -1], [-1, 3]]),
+            pos=jnp.array([7, 6, 5]))
+        # page_size=4: row0 fully mapped; row1 misses tokens 4,5; row2
+        # misses tokens 0..3 (hole before a recovery-mapped page)
+        np.testing.assert_array_equal(
+            np.asarray(dropped_tokens(cache, 4)), [0, 2, 4])
+
+
+class TestTrainerDispatchPath:
+    def test_train_forwards_dst_shardings(self, model):
+        """Regression: the public ``train`` entry point must reach the
+        dispatcher (dst_shardings was silently dropped before)."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.rl.experience import ExperienceBatch
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        dst = ExperienceBatch(*([NamedSharding(mesh, P())] * 10))
+        tr = _trainer(model)
+        _, _, hist = tr.train(1, dst_shardings=dst)
+        assert hist[0].dispatch is not None
+        assert hist[0].dispatch["strategy"] == "direct"
+
+    def test_async_train_dispatches_through_handle(self, model):
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.rl.experience import ExperienceBatch
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        dst = ExperienceBatch(*([NamedSharding(mesh, P())] * 10))
+        tr = _trainer(model, pipeline="async", lag=1, is_rho_max=2.0)
+        _, _, hist = tr.train(2, dst_shardings=dst)
+        assert all(r.dispatch is not None for r in hist)
+        assert hist[0].dispatch["strategy"] == "direct-async"
+
+
+class TestPerStageSelector:
+    def _selector(self):
+        from repro.core.parallelism_selector import (ContextBuckets,
+                                                     ParallelismSelector,
+                                                     ProfileEntry)
+        from repro.core.resharding import MeshConfig
+        a = MeshConfig("a", dp=1, tp=1)
+        b = MeshConfig("b", dp=1, tp=1, fsdp=False)
+        measure = lambda cfg, ctx: ProfileEntry(
+            cfg, ctx, tgs=(2.0 if (cfg.name == "b") == (ctx > 8) else 1.0),
+            feasible=True)
+        sel = ParallelismSelector([a, b], measure, ContextBuckets((8,)),
+                                  ema_alpha=1.0)
+        sel.profile()
+        return sel
+
+    def test_stages_switch_independently(self):
+        sel = self._selector()
+        assert sel.current.name == "a"
+        assert sel.current_for("update").name == "a"
+        sel.observe(100.0)                      # -> bucket 1, best = b
+        sw = sel.maybe_switch(0, stage="rollout")
+        assert sw is not None and sw[1].name == "b"
+        # the update stage still runs its in-flight step on config a
+        assert sel.current_for("rollout").name == "b"
+        assert sel.current_for("update").name == "a"
+        sw2 = sel.maybe_switch(1, stage="update")
+        assert sw2 is not None and sw2[1].name == "b"
+        assert sel.current_for("update").name == "b"
+        stages = [row["stage"] for row in sel.switch_log]
+        assert stages == ["rollout", "update"]
+
+    def test_default_stage_is_rollout(self):
+        sel = self._selector()
+        sel.observe(100.0)
+        assert sel.maybe_switch(0) is not None
+        assert sel.current.name == "b"          # back-compat property
+
+
+class TestMeshSplit:
+    def test_single_device_degenerates(self):
+        from repro.launch.mesh import rollout_trainer_split
+        r, t = rollout_trainer_split(n_devices=1)
+        assert r.n_devices == t.n_devices == 1
+        assert r.device_offset == t.device_offset == 0
+        r.make_mesh()                            # placeable on this host
+
+    def test_multi_device_windows_are_disjoint(self):
+        from repro.launch.mesh import rollout_trainer_split
+        r, t = rollout_trainer_split(n_devices=8, rollout_frac=0.75,
+                                     rollout_tp=2)
+        assert r.device_offset == 0 and t.device_offset == 6
+        assert r.dp * r.tp == 6 and r.tp == 2
+        assert t.n_devices == 2
+        assert r.device_offset + r.n_devices <= t.device_offset
+
+    def test_oversized_tp_is_clamped_to_the_side_share(self):
+        """Regression: tp > a side's device share must shrink to fit,
+        never spill the window into the other stage's slice."""
+        from repro.launch.mesh import rollout_trainer_split
+        r, t = rollout_trainer_split(n_devices=8, rollout_frac=0.25,
+                                     rollout_tp=4)
+        assert r.tp == 2 and r.n_devices == 2          # clamped to share
+        assert r.device_offset + r.n_devices <= t.device_offset
+        assert t.device_offset + t.n_devices <= 8
+
+    def test_offset_beyond_visible_devices_raises(self):
+        from repro.core.resharding import MeshConfig
+        cfg = MeshConfig("far", dp=1, tp=1, device_offset=10_000)
+        with pytest.raises(ValueError, match="devices"):
+            cfg.make_mesh()
+
+
+class TestAsyncHandoff:
+    def test_dispatch_async_handle(self):
+        from repro.core.data_dispatcher import DataDispatcher
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                    ("data", "model"))
+        d = DataDispatcher()
+        x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        handle = d.dispatch_async({"x": x},
+                                  {"x": NamedSharding(mesh, P())})
+        assert not handle._done and d.log == []
+        out, rep = handle.result()
+        np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(x))
+        assert rep.strategy == "direct-async"
+        assert rep.wall_time_s >= 0
+        assert len(d.log) == 1
+        handle.result()                          # idempotent
+        assert len(d.log) == 1
+
+    def test_centralized_async_rejected(self):
+        from repro.core.data_dispatcher import DataDispatcher
+        with pytest.raises(ValueError, match="direct"):
+            DataDispatcher().dispatch_async({}, {}, strategy="centralized")
