@@ -1,7 +1,8 @@
-"""Rollout engine throughput: python-loop vs compiled slot engine, and
-dense vs paged KV cache layouts under episode churn.
+"""Rollout engine throughput: python-loop vs compiled slot engine, dense
+vs paged KV cache layouts under episode churn, and copy-on-write prefix
+sharing under a long shared prompt.
 
-Two regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
+Three regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
 
 1. **Engine grid** — generated tokens/s for the python reference vs the
    compiled engine across batch sizes and turn budgets. The python loop
@@ -18,14 +19,24 @@ Two regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
    The ``equal_mem_batch_ctx`` column reports the batch×context product
    the paged pool admits inside the dense layout's KV budget.
 
+3. **Shared-prompt regime** (``share_prefix`` on vs off, bandit with a
+   long ``prompt_len``) — every episode opens with the same long prompt
+   and a short per-episode suffix, at maximum churn and EQUAL pool
+   memory: the sharing engine forks the prompt's KV pages into refilled
+   slots (one prefill per rollout, not one per episode), so a refill
+   wave's obs feed shrinks from ``obs_len`` to ``suffix`` decode steps
+   and the prompt occupies one page run instead of one per slot.
+
     PYTHONPATH=src python -m benchmarks.bench_rollout
         [--batches 2,8] [--max-turns 3] [--repeats 3]
-        [--churn-mult 4] [--page-size 8]
+        [--churn-mult 4] [--page-size 8] [--prompt-len 40]
 
 CSV (grid):  backend,env,batch,max_turns,episodes,gen_tokens,seconds,
              tokens_per_s
 CSV (churn): layout,env,batch,episodes,gen_tokens,seconds,tokens_per_s,
              cache_kib,equal_mem_batch_ctx
+CSV (shared): share_prefix,env,batch,episodes,gen_tokens,seconds,
+             tokens_per_s,peak_pages,pool_pages,shared_prefix_len
 
 ``main`` returns the rows as a dict so ``benchmarks/run.py`` can write
 ``BENCH_rollout.json`` for cross-PR perf tracking.
@@ -51,17 +62,17 @@ def _build(arch: str, env_name: str):
 
 def _bench_engine(engine, params, batch: int, repeats: int, *,
                   n_episodes=None):
-    """(total generated tokens, seconds) over ``repeats`` timed rollouts;
-    one untimed warmup run absorbs compilation."""
+    """(total generated tokens, seconds, last stats) over ``repeats``
+    timed rollouts; one untimed warmup run absorbs compilation."""
     rng = jax.random.PRNGKey(1)
     engine.run(params, rng, batch, n_episodes=n_episodes)   # warmup
-    tokens = 0
+    tokens, stats = 0, None
     t0 = time.perf_counter()
     for i in range(repeats):
-        exp, _ = engine.run(params, jax.random.fold_in(rng, i), batch,
-                            n_episodes=n_episodes)
+        exp, stats = engine.run(params, jax.random.fold_in(rng, i), batch,
+                                n_episodes=n_episodes)
         tokens += int(np.asarray(exp.gen_mask).sum())
-    return tokens, time.perf_counter() - t0
+    return tokens, time.perf_counter() - t0, stats
 
 
 def _cache_bytes(model, batch: int, s_max: int, **layout_kw) -> int:
@@ -88,7 +99,7 @@ def _grid_section(args, model, params, env):
             for name, eng in (
                     ("python", RolloutEngine(model, env, **kw)),
                     ("compiled", CompiledRolloutEngine(model, env, **kw))):
-                toks, secs = _bench_engine(eng, params, B, args.repeats)
+                toks, secs, _ = _bench_engine(eng, params, B, args.repeats)
                 tps = toks / max(secs, 1e-9)
                 rows.append(dict(backend=name, env=args.env, batch=B,
                                  max_turns=mt, episodes=args.repeats * B,
@@ -140,8 +151,8 @@ def _churn_section(args, model, params):
             eng = CompiledRolloutEngine(
                 model, env, max_turns=1, max_turn_tokens=mtt,
                 max_context=T, temperature=1.0, **lkw)
-            toks, secs = _bench_engine(eng, params, B, args.repeats,
-                                       n_episodes=N)
+            toks, secs, _ = _bench_engine(eng, params, B, args.repeats,
+                                          n_episodes=N)
             tps = toks / max(secs, 1e-9)
             cb = _cache_bytes(model, B, T, **(
                 dict(layout="paged", page_size=ps, n_pages=pool)
@@ -165,6 +176,66 @@ def _churn_section(args, model, params):
     return rows
 
 
+def _shared_prefix_section(args, model, params):
+    """Shared-prompt regime: every episode opens with the same long
+    prompt (bandit ``prompt_len``) and only a short per-episode suffix
+    differs; single-turn episodes churn slots every macro-step. At EQUAL
+    pool memory, ``share_prefix=True`` forks the prompt's pages into
+    refilled slots instead of re-feeding the prompt — a refill wave costs
+    ``suffix`` decode steps instead of ``obs_len``, and the prompt
+    occupies one page run instead of one per slot (peak_pages column)."""
+    from repro.models import paging
+    from repro.rl.engine import CompiledRolloutEngine
+    from repro.rl.envs import make_env
+
+    env = make_env("bandit", prompt_len=args.prompt_len)
+    mtt, ps = 2, args.page_size
+    # the long prompt needs its own context budget (engine asserts one
+    # full turn fits: obs + gen + obs)
+    T = max(args.max_context, 2 * env.obs_len + mtt)
+    peak = env.obs_len + mtt               # single-turn episode peak tokens
+    batches = [int(b) for b in args.batches.split(",")]
+    print("\n# shared-prompt regime: bandit prompt_len="
+          f"{args.prompt_len} (obs {env.obs_len} tokens, "
+          f"{env.prompt_prefix_len} shared), n_episodes = "
+          f"{args.churn_mult} x batch, equal pool memory")
+    print("# share_prefix,env,batch,episodes,gen_tokens,seconds,"
+          "tokens_per_s,peak_pages,pool_pages,shared_prefix_len")
+    rows = []
+    for B in batches:
+        N = args.churn_mult * B
+        # pool sized for the UNSHARED live-token requirement; the shared
+        # engine runs inside the same budget (the win must not come from
+        # a bigger pool)
+        pool = B * paging.pages_per_slot(peak, ps)
+        for share in (False, True):
+            eng = CompiledRolloutEngine(
+                model, env, max_turns=1, max_turn_tokens=mtt,
+                max_context=T, temperature=1.0, cache_layout="paged",
+                page_size=ps, cache_pages=pool, share_prefix=share)
+            toks, secs, stats = _bench_engine(eng, params, B, args.repeats,
+                                              n_episodes=N)
+            tps = toks / max(secs, 1e-9)
+            rows.append(dict(share_prefix=share, env="bandit", batch=B,
+                             episodes=N, gen_tokens=toks,
+                             seconds=round(secs, 3),
+                             tokens_per_s=round(tps, 1),
+                             peak_pages=stats.pages_in_use,
+                             pool_pages=stats.page_capacity,
+                             kv_dropped_writes=stats.kv_dropped_writes,
+                             shared_prefix_len=stats.shared_prefix_len))
+            print(f"{share},bandit,{B},{N},{toks},{secs:.3f},{tps:.1f},"
+                  f"{stats.pages_in_use},{stats.page_capacity},"
+                  f"{stats.shared_prefix_len}")
+        off, on = rows[-2], rows[-1]
+        print(f"# batch={B}: share_prefix "
+              f"{on['tokens_per_s'] / max(off['tokens_per_s'], 1e-9):.2f}x "
+              f"tokens/s, peak pages {off['peak_pages']} -> "
+              f"{on['peak_pages']} at equal pool "
+              f"({off['pool_pages']} pages)")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -178,13 +249,17 @@ def main(argv=None):
                     help="churn regime: episodes per slot (n_episodes = "
                          "mult * batch)")
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=40,
+                    help="shared-prompt regime: fixed prompt tokens "
+                         "prepended to every bandit observation")
     # benchmarks.run calls main() with no argv — don't inherit its flags
     args = ap.parse_args(argv if argv is not None else [])
 
     model, params, env = _build(args.arch, args.env)
     grid = _grid_section(args, model, params, env)
     churn = _churn_section(args, model, params)
-    return {"engine_grid": grid, "churn": churn}
+    shared = _shared_prefix_section(args, model, params)
+    return {"engine_grid": grid, "churn": churn, "shared_prefix": shared}
 
 
 if __name__ == "__main__":

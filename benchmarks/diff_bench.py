@@ -30,7 +30,7 @@ METRIC_SUFFIXES = ("_per_s",)
 #: measured (run-dependent) fields excluded from a row's identity so a
 #: trajectory-level change doesn't orphan the row instead of diffing it
 IDENT_EXCLUDE = {"gen_tokens", "equal_mem_batch_ctx", "policy_lag",
-                 "cache_kib"}
+                 "cache_kib", "peak_pages", "kv_dropped_writes"}
 
 
 def _is_metric(key: str) -> bool:

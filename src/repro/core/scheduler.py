@@ -155,9 +155,11 @@ class PipelineSchedule:
                 t0 = time.perf_counter()
                 exp, stats, switch = tr.rollout_stage(
                     k, behavior, tr._next_rng(), tr.batch_size,
-                    n_episodes=tr.rollout_episodes, ref_params=ref_params,
+                    n_episodes=tr.rollout_episodes,
+                    ref_params=(ref_params if tr.ref_folded else None),
                     params_version=v)
-                exp = tr.expprep_stage(exp, ref_params=ref_params)
+                exp = tr.expprep_stage(exp, ref_params=ref_params,
+                                       ref_folded=tr.ref_folded)
                 # capture the engine-reported source layout NOW — the
                 # next rollout overwrites it before the worker runs
                 src = (tr.dispatch_stage.source_shardings(exp)

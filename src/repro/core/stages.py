@@ -256,6 +256,9 @@ class EarlTrainer:
     cache_layout: str = "dense"             # compiled: "dense" | "paged"
     page_size: int = 16                     # paged: tokens per KV page
     cache_pages: Optional[int] = None       # paged: pool size (None = full)
+    share_prefix: bool = False              # paged: fork shared-prompt pages
+    prefix_len: Optional[int] = None        # None = env.prompt_prefix_len
+    on_exhaust: str = "count"               # "count" | "raise" on pool drop
     pipeline: str = "sync"                  # "sync" | "async"
     max_policy_lag: int = 1                 # async: bounded staleness
     is_rho_max: float = 0.0                 # truncated-IS cap (0 = off)
@@ -279,7 +282,9 @@ class EarlTrainer:
             self.rollout = CompiledRolloutEngine(
                 self.model, self.env, mesh_config=mesh_cfg,
                 cache_layout=self.cache_layout, page_size=self.page_size,
-                cache_pages=self.cache_pages, **kw)
+                cache_pages=self.cache_pages,
+                share_prefix=self.share_prefix, prefix_len=self.prefix_len,
+                on_exhaust=self.on_exhaust, **kw)
         elif self.rollout_backend == "python":
             if self.rollout_episodes is not None:
                 raise ValueError(
@@ -290,11 +295,21 @@ class EarlTrainer:
                     "cache_layout='paged' requires "
                     "rollout_backend='compiled' (the paged pool and its "
                     "in-graph allocator live in the compiled macro-step)")
+            if self.share_prefix:
+                raise ValueError(
+                    "share_prefix requires rollout_backend='compiled' "
+                    "with cache_layout='paged' (prefix sharing forks "
+                    "pool pages inside the compiled macro-step)")
             self.rollout = RolloutEngine(self.model, self.env, **kw)
         else:
             raise ValueError(
                 f"unknown rollout_backend {self.rollout_backend!r}")
 
+        # prefix sharing forks only the POLICY's paged pool; the in-graph
+        # reference pass keeps a dense cache and cannot skip the shared
+        # columns, so a sharing engine falls back to the standalone
+        # ExpPrep ref program instead of folding the ref into the rollout
+        self.ref_folded = not getattr(self.rollout, "shared_pages", 0)
         self.rollout_stage = RolloutStage(self.rollout, self.selector)
         self.expprep_stage = ExpPrepStage(
             self.model, advantage=self.advantage,
@@ -358,12 +373,15 @@ class EarlTrainer:
         # signature; n_episodes > batch_size engages slot refill.
         exp, stats, switch = self.rollout_stage(
             step, params, self._next_rng(), self.batch_size,
-            n_episodes=self.rollout_episodes, ref_params=ref_params,
+            n_episodes=self.rollout_episodes,
+            ref_params=ref_params if self.ref_folded else None,
             params_version=step)
         t_roll = time.perf_counter() - t0
 
-        # ② Experience Preparation (advantages; ref already folded)
-        exp = self.expprep_stage(exp, ref_params=ref_params)
+        # ② Experience Preparation (advantages; ref folded into the
+        # rollout unless prefix sharing forced the standalone fallback)
+        exp = self.expprep_stage(exp, ref_params=ref_params,
+                                 ref_folded=self.ref_folded)
 
         # ③④⑤ Dispatch to the Update layout
         exp, dispatch_row = self.dispatch_stage(exp, dst_shardings)

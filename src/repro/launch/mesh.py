@@ -200,7 +200,7 @@ def cache_shardings(cache_abstract, mesh: Mesh, *, seq_len: int,
     (L,B,H,P,N): H→model when divisible. pos (B,)→data.
     Paged KV pools (L, n_pages, page_size, KV, hd): pages→data (the pool
     splits across data shards; the block-table gather is GSPMD's),
-    kv-heads→model; block_table rows→data; the free mask replicates (the
+    kv-heads→model; block_table rows→data; the refcount replicates (the
     allocator cumsums over it).
     """
     tp = mesh.shape.get("model", 1)
@@ -218,14 +218,14 @@ def cache_shardings(cache_abstract, mesh: Mesh, *, seq_len: int,
         spec: list = [None] * nd
         leafname = name.rsplit("/", 1)[-1]
         # paged-layout bookkeeping leaves: block_table (B, NP) is per-row
-        # on dim 0; the free mask (P,) is pool-global — the allocator
+        # on dim 0; the refcount (P,) is pool-global — the allocator
         # cumsums over it, so keep it replicated
         if leafname == "block_table":
             if leaf.shape[0] % dp == 0:
                 spec[0] = batch_entry
             out.append(NamedSharding(mesh, P(*spec)))
             continue
-        if leafname == "free":
+        if leafname == "refcount":
             out.append(NamedSharding(mesh, P(*spec)))
             continue
         if nd >= 2 and leaf.shape[1] % dp == 0:

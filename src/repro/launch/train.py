@@ -56,6 +56,20 @@ def main(argv=None):
                     help="paged layout: pool size in pages (default: full "
                          "per-slot provisioning batch*ceil(ctx/page); pass "
                          "less to cap memory at expected live tokens)")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="paged layout: prefill the episodes' common "
+                         "prompt prefix once and fork its pages across "
+                         "slots (copy-on-write; prefix length from the "
+                         "env's prompt_prefix_len unless --prefix-len)")
+    ap.add_argument("--prefix-len", type=int, default=None,
+                    help="override the env-declared shared-prompt length "
+                         "in tokens (full pages of it are shared)")
+    ap.add_argument("--on-exhaust", default="count",
+                    choices=["count", "raise"],
+                    help="paged pool exhaustion: 'count' records dropped "
+                         "KV writes in telemetry (default); 'raise' fails "
+                         "the rollout instead of silently truncating "
+                         "episode context")
     ap.add_argument("--pipeline", default="sync",
                     choices=["sync", "async"],
                     help="async = overlap Rollout(k+1) with Update(k) "
@@ -106,7 +120,9 @@ def main(argv=None):
         advantage=args.advantage, rollout_backend=args.rollout_backend,
         rollout_episodes=args.rollout_episodes,
         cache_layout=args.cache_layout, page_size=args.page_size,
-        cache_pages=args.cache_pages, pipeline=args.pipeline,
+        cache_pages=args.cache_pages, share_prefix=args.share_prefix,
+        prefix_len=args.prefix_len, on_exhaust=args.on_exhaust,
+        pipeline=args.pipeline,
         max_policy_lag=args.max_policy_lag,
         # lag 0 experience is on-policy: arming the correction there
         # would only inject decode-vs-forward fp noise into the weights

@@ -376,8 +376,59 @@ def paged_prefill_attention(p, x, kv: KVEntry, block_table, *, n_heads,
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_kv
 
 
+def paged_chunk_attention(p, x, kv: KVEntry, block_table, start, *, n_heads,
+                          n_kv_heads, head_dim, rope_theta,
+                          attn_impl: str = "xla"):
+    """Causal attention for a CHUNK of positions ``[start, start+S)``
+    whose preceding context already lives in the pool — the per-slot
+    suffix phase of the shared-prefix prefill (``transformer.
+    _paged_prefill``): the forked prefix pages hold positions
+    ``[0, start)``, this computes only the suffix's q/k/v, scatters the
+    suffix K/V into the slot's (already mapped) pages, and attends each
+    suffix query over the gathered full context. ``start`` is static and
+    page-aligned (the shared run is full pages only).
+    """
+    B, S, _ = x.shape
+    P, ps = kv.k.shape[0], kv.k.shape[1]
+    assert start % ps == 0, (start, ps)
+    positions = start + jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    j0 = start // ps
+    npp = -(-S // ps)                      # pages covering the chunk
+    pad = npp * ps - S
+    pages = block_table[:, j0:j0 + npp]
+    pages = jnp.where(pages >= 0, pages, P)                 # OOB -> drop
+
+    def scatter(pool, new):
+        buf = jnp.pad(new.astype(pool.dtype),
+                      ((0, 0), (0, pad), (0, 0), (0, 0)))
+        buf = buf.reshape(B, npp, ps, new.shape[2], new.shape[3])
+        return pool.at[pages].set(buf, mode="drop")
+
+    new_kv = KVEntry(scatter(kv.k, k), scatter(kv.v, v))
+    # gather the full context [0, start+S) back through the block table
+    # (prefix pages included) — the xla oracle layout, as in the paged
+    # decode fallback; masked positions never contribute
+    ctx_np = j0 + npp
+    bt = block_table[:, :ctx_np]
+    bt_c = jnp.clip(bt, 0, P - 1)
+    kc = new_kv.k[bt_c].reshape(B, ctx_np * ps, n_kv_heads, head_dim)
+    vc = new_kv.v[bt_c].reshape(B, ctx_np * ps, n_kv_heads, head_dim)
+    s_idx = jnp.arange(ctx_np * ps)[None, None, :]          # (1,1,Sk)
+    valid = ((s_idx <= positions[:, :, None])               # causal
+             & jnp.repeat(bt >= 0, ps, axis=1)[:, None, :])
+    mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+    out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), mask)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_kv
+
+
 def paged_decode_attention(p, x, kv: KVEntry, block_table, pos, *, wpage,
-                           woff, scrub=None, n_heads, n_kv_heads, head_dim,
+                           woff, scrub=None, cow_src=None, cow_dst=None,
+                           n_heads, n_kv_heads, head_dim,
                            rope_theta, attn_impl: str = "xla"):
     """One-token decode against a paged KV pool. x: (B,1,D).
 
@@ -390,6 +441,11 @@ def paged_decode_attention(p, x, kv: KVEntry, block_table, pos, *, wpage,
     optional (B,) page indices to zero before the write (pages mapped
     mid-row while recovering from pool exhaustion — the recycled
     contents must not leak into the validity window; sentinel P = none).
+    cow_src/cow_dst: optional (B,) page pairs from the copy-on-write
+    allocator (``paging.cow_pages``) — dst is a freshly privatized copy
+    of the shared src page; this layer's slice of src is copied into dst
+    BEFORE the write lands (sentinel P = no copy). The caller already
+    remapped the block table, so reads go through dst.
 
     attn_impl: "xla" gathers the row's pages into a dense view and reuses
     the masked-softmax math (the pure-jnp oracle layout); "paged" (or
@@ -405,6 +461,14 @@ def paged_decode_attention(p, x, kv: KVEntry, block_table, pos, *, wpage,
     q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
     q = apply_rope(q, positions, rope_theta)
     k_new = apply_rope(k_new, positions, rope_theta)
+    if cow_src is not None:
+        # privatize shared pages first (CoW): the copied content below
+        # the row's fill line must be in place before scrub/write. CoW
+        # dst pages and exhaustion-recovery scrub pages are disjoint (a
+        # freshly allocated page has refcount 1 — never CoW'd).
+        src_c = jnp.clip(cow_src, 0, P - 1)
+        kv = KVEntry(kv.k.at[cow_dst].set(kv.k[src_c], mode="drop"),
+                     kv.v.at[cow_dst].set(kv.v[src_c], mode="drop"))
     if scrub is not None:
         zero = jnp.zeros((), kv.k.dtype)
         kv = KVEntry(kv.k.at[scrub].set(zero, mode="drop"),

@@ -2,11 +2,22 @@
 
 A *page pool* is a shared array of fixed-size KV blocks; each decode slot
 maps its context onto pool pages through a per-slot *block table*. The
-allocator here is pure ``jnp`` — allocation and release are rank/cumsum
-scatters with no host sync, so they run inside the compiled rollout
-macro-step (the whole point: slot refill *releases* a slot's pages back
-to the pool instead of zeroing a dense ``(max_context,)`` cache row, and
-pool memory scales with *live* tokens instead of allocated capacity).
+allocator here is pure ``jnp`` — allocation, release, fork and
+copy-on-write are rank/cumsum scatters with no host sync, so they run
+inside the compiled rollout macro-step (the whole point: slot refill
+*releases* a slot's pages back to the pool instead of zeroing a dense
+``(max_context,)`` cache row, and pool memory scales with *live* tokens
+instead of allocated capacity).
+
+Pages are **refcounted** (PR 5): a page may be mapped by several block
+tables at once — the copy-on-write prefix-sharing substrate that lets
+every slot of a rollout wave reference ONE prefilled copy of the shared
+prompt instead of prefilling it ``batch`` times. ``refcount == 0`` is the
+free state (the old ``free`` bitmap is exactly ``refcount == 0``);
+``fork_pages`` maps an existing page run into more rows (bumping
+refcounts), ``release_pages`` decrements, and ``cow_pages`` privatizes a
+shared page on first write (allocate + remap; the KV data copy is the
+caller's per-layer job).
 
 Conventions shared by every consumer (``models/transformer.py`` paged
 paths, ``kernels/paged_attention``, ``rl/engine/paging.py``):
@@ -14,11 +25,13 @@ paths, ``kernels/paged_attention``, ``rl/engine/paging.py``):
   - ``block_table``: ``(B, pages_per_slot) int32``; ``PAGE_UNMAPPED``
     (= -1) marks an unallocated entry. Slot-local page index ``j`` holds
     absolute token positions ``[j*page_size, (j+1)*page_size)``.
-  - ``free``: ``(n_pages,) bool`` — True = page available.
+  - ``refcount``: ``(n_pages,) int32`` — 0 = free, k >= 1 = mapped by k
+    owners (block-table rows and/or a caller-held pin).
   - Failed allocations (pool exhausted) return the sentinel ``n_pages``
     and leave the block table unmapped; writes through the sentinel are
     dropped by ``mode="drop"`` scatters. Callers size the pool so this
-    cannot happen on the hot path (``pool_pages_needed``).
+    cannot happen on the hot path (``pool_pages_needed`` /
+    ``pool_pages_needed_shared``).
 """
 from __future__ import annotations
 
@@ -40,18 +53,34 @@ def pool_pages_needed(batch: int, s_max: int, page_size: int) -> int:
     return batch * pages_per_slot(s_max, page_size)
 
 
-def alloc_pages(free, need):
-    """Grab one free page for every row with ``need=True``.
+def pool_pages_needed_shared(batch: int, s_max: int, prefix_len: int,
+                             page_size: int) -> int:
+    """Exhaustion-free pool size when the first ``prefix_len`` tokens of
+    every slot are a SHARED prefix run (prefix sharing): the run's full
+    pages are allocated once and forked ``batch`` ways instead of being
+    provisioned per slot. Pass the *effective* shared length (full pages
+    only — the engine clamps to ``(min(prefix_len, obs_len - 1) //
+    page_size) * page_size``); partial-page prefix tokens stay per-slot
+    and are already covered by the per-slot term."""
+    pps = pages_per_slot(s_max, page_size)
+    shared = min(prefix_len // page_size, pps)
+    return batch * (pps - shared) + shared
 
-    free: (P,) bool; need: (B,) bool.
-    Returns ``(pages, free')`` where ``pages`` is (B,) int32 — the r-th
-    needing row receives the r-th free page; rows with ``need=False`` or
-    beyond the free supply get the OOB sentinel ``P``. Pure rank-match:
-    no loop, no host sync, safe inside ``lax.scan`` bodies.
+
+def alloc_pages(refcount, need):
+    """Grab one free page (refcount 0) for every row with ``need=True``.
+
+    refcount: (P,) int32; need: (B,) bool.
+    Returns ``(pages, refcount')`` where ``pages`` is (B,) int32 — the
+    r-th needing row receives the r-th free page (its refcount becomes 1);
+    rows with ``need=False`` or beyond the free supply get the OOB
+    sentinel ``P``. Pure rank-match: no loop, no host sync, safe inside
+    ``lax.scan`` bodies.
     """
-    free = jnp.asarray(free)
+    refcount = jnp.asarray(refcount)
     need = jnp.asarray(need)
-    P = free.shape[0]
+    P = refcount.shape[0]
+    free = refcount == 0
     rank = jnp.cumsum(need.astype(jnp.int32)) - 1           # (B,) alloc rank
     free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1      # (P,)
     total_free = jnp.sum(free.astype(jnp.int32))
@@ -61,23 +90,93 @@ def alloc_pages(free, need):
             jnp.arange(P, dtype=jnp.int32), mode="drop")
     ok = need & (rank < total_free)
     pages = jnp.where(ok, rank_to_page[jnp.clip(rank, 0, P - 1)], P)
-    free = free.at[pages].set(False, mode="drop")
-    return pages.astype(jnp.int32), free
+    refcount = refcount.at[pages].set(1, mode="drop")
+    return pages.astype(jnp.int32), refcount
 
 
-def release_pages(free, block_table, rows):
-    """Return every page owned by ``rows`` (bool (B,)) to the pool and
-    unmap those block-table rows. Returns ``(free', block_table')``."""
+def release_pages(refcount, block_table, rows):
+    """Drop one reference per page mapped by ``rows`` (bool (B,)) and
+    unmap those block-table rows. A page shared with a surviving owner
+    (another row, or a caller-held pin) keeps ``refcount >= 1`` and its
+    contents stay live; the last release frees it (refcount 0).
+    Returns ``(refcount', block_table')``."""
+    refcount = jnp.asarray(refcount)
     block_table = jnp.asarray(block_table)
     rows = jnp.asarray(rows)
-    P = free.shape[0]
+    P = refcount.shape[0]
     owned = rows[:, None] & (block_table >= 0)
     idx = jnp.where(owned, block_table, P)                  # OOB -> drop
-    free = free.at[idx.reshape(-1)].set(True, mode="drop")
+    refcount = refcount.at[idx.reshape(-1)].add(-1, mode="drop")
     block_table = jnp.where(rows[:, None], PAGE_UNMAPPED, block_table)
-    return free, block_table
+    return refcount, block_table
 
 
-def pages_in_use(free) -> jax.Array:
-    """Scalar int32: currently allocated pages (pool occupancy stat)."""
-    return jnp.sum((~jnp.asarray(free)).astype(jnp.int32))
+def fork_pages(refcount, block_table, pages, rows):
+    """Map the page run ``pages`` into block-table entries ``[0, K)`` of
+    every row with ``rows=True``, adding one reference per (row, page).
+
+    pages: (K,) int32 — an existing run (sentinel / PAGE_UNMAPPED entries
+    are skipped); rows: (B,) bool. The target entries must be UNMAPPED
+    (released rows / fresh slots) — forking over a live mapping would
+    leak its reference. Returns ``(refcount', block_table')``.
+    """
+    refcount = jnp.asarray(refcount)
+    block_table = jnp.asarray(block_table)
+    pages = jnp.asarray(pages, jnp.int32)
+    rows = jnp.asarray(rows)
+    P = refcount.shape[0]
+    K = pages.shape[0]
+    valid = (pages >= 0) & (pages < P)                      # (K,)
+    take = rows[:, None] & valid[None, :]                   # (B, K)
+    head = jnp.where(take, jnp.broadcast_to(pages[None, :], take.shape),
+                     block_table[:, :K])
+    block_table = block_table.at[:, :K].set(head)
+    n = jnp.sum(rows.astype(jnp.int32))
+    refcount = refcount.at[jnp.where(valid, pages, P)].add(n, mode="drop")
+    return refcount, block_table
+
+
+def cow_pages(refcount, block_table, entry, rows):
+    """Copy-on-write: privatize the page behind ``block_table[r,
+    entry[r]]`` for every row with ``rows=True`` that is about to WRITE
+    into a SHARED page (refcount > 1) — allocate a fresh private page,
+    remap the entry, and drop one reference from the shared source.
+
+    entry: (B,) int32 block-table column per row; rows: (B,) bool (the
+    rows writing this step). Rows whose page is private (refcount 1) or
+    unmapped are untouched. Returns ``(src, dst, blocked, refcount',
+    block_table')``: ``src``/``dst`` are (B,) page indices for the data
+    copy the caller must perform per layer (sentinel ``P`` = no copy);
+    ``blocked`` marks rows that NEEDED a private copy but found the pool
+    exhausted — the caller must drop their write (writing through the
+    still-shared mapping would corrupt every sibling).
+    """
+    refcount = jnp.asarray(refcount)
+    block_table = jnp.asarray(block_table)
+    entry = jnp.asarray(entry, jnp.int32)
+    rows = jnp.asarray(rows)
+    B = block_table.shape[0]
+    NP = block_table.shape[1]
+    P = refcount.shape[0]
+    ridx = jnp.arange(B)
+    cur = block_table[ridx, jnp.clip(entry, 0, NP - 1)]     # (B,)
+    shared = (cur >= 0) & (refcount[jnp.clip(cur, 0, P - 1)] > 1)
+    need = rows & shared
+    new_pages, refcount = alloc_pages(refcount, need)
+    ok = need & (new_pages < P)
+    blocked = need & ~ok
+    # remap the entry to the private copy; non-ok rows write column NP
+    # (OOB -> dropped), keeping their (still shared) mapping intact
+    block_table = block_table.at[
+        ridx, jnp.where(ok, entry, NP)].set(new_pages, mode="drop")
+    refcount = refcount.at[jnp.where(ok, cur, P)].add(-1, mode="drop")
+    src = jnp.where(ok, cur, P).astype(jnp.int32)
+    dst = jnp.where(ok, new_pages, P).astype(jnp.int32)
+    return src, dst, blocked, refcount, block_table
+
+
+def pages_in_use(refcount) -> jax.Array:
+    """Scalar int32: currently allocated pages (pool occupancy stat).
+    A page forked across many rows counts ONCE — that difference vs the
+    per-slot sum is exactly the prefix-sharing memory win."""
+    return jnp.sum((jnp.asarray(refcount) > 0).astype(jnp.int32))

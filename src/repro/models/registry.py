@@ -70,28 +70,55 @@ class Model:
                                     **layout_kw)
         return self._init_cache(self.cfg, batch, s_max, dtype)
 
-    def prefill(self, params, tokens, cache, *, extra=None, attn_impl="xla"):
+    def prefill(self, params, tokens, cache, *, extra=None, attn_impl="xla",
+                **layout_kw):
+        """layout_kw: paged-layout options (``shared_prefix_len=N`` —
+        prefill the common prompt prefix once and fork its pages across
+        rows); families whose ``prefill`` doesn't take them reject with a
+        clear error (signature check, so genuine TypeErrors propagate)."""
+        if layout_kw:
+            self._check_layout_kw(self._prefill, layout_kw, "prefill")
         return self._prefill(self.cfg, params, tokens, cache, extra=extra,
-                             attn_impl=attn_impl)
+                             attn_impl=attn_impl, **layout_kw)
 
     def decode_step(self, params, token, cache, *, extra=None,
-                    attn_impl="xla", advance=None):
+                    attn_impl="xla", advance=None, **layout_kw):
+        """layout_kw: paged-layout options (``cow=False`` statically
+        drops the copy-on-write guard when no decode write can land in a
+        shared page); signature-checked like ``init_cache``."""
+        if layout_kw:
+            self._check_layout_kw(self._decode_step, layout_kw,
+                                  "decode_step")
         return self._decode_step(self.cfg, params, token, cache, extra=extra,
-                                 attn_impl=attn_impl, advance=advance)
+                                 attn_impl=attn_impl, advance=advance,
+                                 **layout_kw)
 
-    def decode_scan_body(self, params, *, extra=None, attn_impl="xla"):
+    def decode_scan_body(self, params, *, extra=None, attn_impl="xla",
+                         **layout_kw):
         """``lax.scan`` body over decode steps for in-graph generation:
         ``body((logits, cache), (token, advance)) -> ((logits, cache),
         None)``. Families with a native implementation (dense) use it;
         everything else wraps ``decode_step`` with the same
         ``transformer.scan_body_over`` merge semantics."""
         if self._decode_scan_body is not None:
+            if layout_kw:
+                self._check_layout_kw(self._decode_scan_body, layout_kw,
+                                      "decode_scan_body")
             return self._decode_scan_body(self.cfg, params, extra=extra,
-                                          attn_impl=attn_impl)
+                                          attn_impl=attn_impl, **layout_kw)
         return transformer.scan_body_over(
             lambda token, advance, cache: self.decode_step(
                 params, token, cache, extra=extra, attn_impl=attn_impl,
-                advance=advance))
+                advance=advance, **layout_kw))
+
+    def _check_layout_kw(self, fn, kw, what: str) -> None:
+        import inspect
+        params_ = inspect.signature(fn).parameters
+        unsupported = sorted(k for k in kw if k not in params_)
+        if unsupported:
+            raise ValueError(
+                f"family {self.cfg.family!r} does not support {what} "
+                f"options {unsupported}")
 
     # -- stubbed modality inputs --------------------------------------------
     def input_extras(self, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:

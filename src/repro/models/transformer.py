@@ -88,11 +88,15 @@ class DecodeCache(NamedTuple):
 class PagedDecodeCache(NamedTuple):
     """Paged KV layout: one shared page pool per layer + per-slot block
     tables (vLLM-style). Pool memory scales with *live* tokens across the
-    batch instead of ``B * s_max``; freeing a slot is a block-table/free-
-    mask update, not a cache-row zero (``rl/engine/paging.py``)."""
+    batch instead of ``B * s_max``; freeing a slot is a block-table/
+    refcount update, not a cache-row zero (``rl/engine/paging.py``).
+    Pages are refcounted (``refcount == 0`` is free) so several rows can
+    map the SAME page — copy-on-write prefix sharing: a common prompt is
+    prefilled once and its full pages forked across rows; a row's first
+    write into a shared page privatizes it (``paging.cow_pages``)."""
     kv: L.KVEntry           # stacked: (n_layers, n_pages, page_size, KV, hd)
     block_table: jax.Array  # (B, pages_per_slot) int32; -1 = unmapped
-    free: jax.Array         # (n_pages,) bool — True = page available
+    refcount: jax.Array     # (n_pages,) int32 — 0 = free, k = k owners
     pos: jax.Array          # (B,) int32 per-row cache fill (ragged batches)
 
     @property
@@ -120,7 +124,7 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int,
             kv=L.KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
             block_table=jnp.full((batch, nps), paging.PAGE_UNMAPPED,
                                  jnp.int32),
-            free=jnp.ones((n_pages,), bool),
+            refcount=jnp.zeros((n_pages,), jnp.int32),
             pos=jnp.zeros((batch,), jnp.int32),
         )
     assert layout == "dense", layout
@@ -136,48 +140,99 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int,
 
 
 def _paged_prefill(cfg: ModelConfig, params, tokens,
-                   cache: PagedDecodeCache, *, attn_impl: str = "xla"):
+                   cache: PagedDecodeCache, *, attn_impl: str = "xla",
+                   shared_prefix_len: int = 0):
     """Prompt pass for the paged layout: allocate the covering pages once
-    (shared by every layer), then scatter each layer's k/v into them."""
-    x = L.embed(params["embedding"], tokens)
+    (shared by every layer), then scatter each layer's k/v into them.
+
+    ``shared_prefix_len > 0`` declares the first N tokens of EVERY row
+    identical (system prompt / tool schemas / GRPO group prompt): the
+    covering FULL pages are prefilled once at batch 1 and forked into
+    every row's block table (refcount = B), so the dominant prefix
+    FLOPs+memory are paid once instead of ``B`` times; only the partial
+    last page + per-row suffix run per row (``L.paged_chunk_attention``).
+    """
     B, S = tokens.shape
     ps, P = cache.page_size, cache.n_pages
     npp = paging.pages_per_slot(S, ps)
     assert npp <= cache.block_table.shape[1], (S, ps)
-    bt, free = cache.block_table, cache.free
-    for j in range(npp):                   # static page-slot loop
+    # shared run = full pages only, and never the whole prompt (the
+    # last-token logits must come from a per-row pass)
+    shared_pages = min(int(shared_prefix_len), S - 1) // ps if B > 1 else 0
+    shared_len = shared_pages * ps
+    bt, refcount = cache.block_table, cache.refcount
+
+    def layer_pass(x, kv, table, attend):
+        def body(x, scanned):
+            layer_p, kv_l = scanned
+            h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+            h, new_kv = attend(layer_p["attn"], h, kv_l, table)
+            x = x + h
+            h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+            x = x + L.mlp(layer_p["mlp"], h)
+            return x, new_kv
+        return lax.scan(body, x, (params["layers"], kv))
+
+    akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+               head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+               attn_impl=attn_impl)
+    kv = cache.kv
+    if shared_pages > 0:
+        # phase A — prefill the shared prefix ONCE (batch 1) into a fresh
+        # page run, then fork the run into every row (one ref per row;
+        # the run's own allocation ref is handed over to the rows)
+        run, refcount = paging.alloc_pages(
+            refcount, jnp.ones((shared_pages,), bool))
+        x0 = L.embed(params["embedding"], tokens[:1, :shared_len])
+        _, kv = layer_pass(
+            x0, kv, run[None, :],
+            lambda p, h, kv_l, table: L.paged_prefill_attention(
+                p, h, kv_l, table, **akw))
+        refcount, bt = paging.fork_pages(refcount, bt, run,
+                                         jnp.ones((B,), bool))
+        refcount = refcount.at[run].add(-1, mode="drop")
+
+    for j in range(shared_pages, npp):     # static page-slot loop
         need = bt[:, j] < 0
-        pages, free = paging.alloc_pages(free, need)
+        pages, refcount = paging.alloc_pages(refcount, need)
         bt = bt.at[:, j].set(jnp.where(need & (pages < P), pages, bt[:, j]))
 
-    def body(x, scanned):
-        layer_p, kv_l = scanned
-        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
-        h, new_kv = L.paged_prefill_attention(
-            layer_p["attn"], h, kv_l, bt, n_heads=cfg.n_heads,
-            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
-            rope_theta=cfg.rope_theta, attn_impl=attn_impl)
-        x = x + h
-        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
-        x = x + L.mlp(layer_p["mlp"], h)
-        return x, new_kv
-
-    x, new_kv = lax.scan(body, x, (params["layers"], cache.kv))
+    if shared_pages > 0:
+        # phase B — per-row pass over the suffix (partial last page
+        # included), attending through the forked prefix pages
+        xs = L.embed(params["embedding"], tokens[:, shared_len:])
+        x, new_kv = layer_pass(
+            xs, kv, bt,
+            lambda p, h, kv_l, table: L.paged_chunk_attention(
+                p, h, kv_l, table, shared_len, **akw))
+    else:
+        x = L.embed(params["embedding"], tokens)
+        x, new_kv = layer_pass(
+            x, kv, bt,
+            lambda p, h, kv_l, table: L.paged_prefill_attention(
+                p, h, kv_l, table, **akw))
     x = L.rms_norm(x[:, -1:], params["ln_f"], cfg.rms_eps)
     head = params.get("lm_head", params["embedding"])
     logits = L.unembed(head, x)[:, 0]
-    return logits, PagedDecodeCache(kv=new_kv, block_table=bt, free=free,
+    return logits, PagedDecodeCache(kv=new_kv, block_table=bt,
+                                    refcount=refcount,
                                     pos=jnp.full((B,), S, jnp.int32))
 
 
 def prefill(cfg: ModelConfig, params, tokens, cache, *,
-            extra=None, attn_impl: str = "xla"):
+            extra=None, attn_impl: str = "xla", shared_prefix_len: int = 0):
     """Run the prompt through the model, filling the cache. Returns
-    (logits_last, cache)."""
+    (logits_last, cache). ``shared_prefix_len`` (paged cache only): the
+    first N tokens of every row are identical — prefill them once and
+    fork the pages (see ``_paged_prefill``)."""
     del extra
     if isinstance(cache, PagedDecodeCache):
         return _paged_prefill(cfg, params, tokens, cache,
-                              attn_impl=attn_impl)
+                              attn_impl=attn_impl,
+                              shared_prefix_len=shared_prefix_len)
+    assert shared_prefix_len == 0, (
+        "shared_prefix_len requires the paged cache layout (dense rows "
+        "have nothing to fork)")
     x = L.embed(params["embedding"], tokens)
     S = tokens.shape[1]
 
@@ -205,11 +260,17 @@ def prefill(cfg: ModelConfig, params, tokens, cache, *,
 
 def _paged_decode_step(cfg: ModelConfig, params, token,
                        cache: PagedDecodeCache, *, attn_impl: str = "xla",
-                       advance=None):
+                       advance=None, cow: bool = True):
     """One decode step on the paged layout. The page allocator runs ONCE
     per token, outside the layer scan — every layer shares the block
     table, so a boundary crossing costs one rank-match alloc, not one per
-    layer."""
+    layer.
+
+    ``cow=False`` statically removes the copy-on-write guard (its
+    allocator pass + per-layer page copy are real work even when no page
+    is shared) — ONLY safe when the caller can prove no decode write
+    ever lands in a ``refcount > 1`` page: no sharing at all, or
+    page-aligned sharing whose writes start past the shared run."""
     x = L.embed(params["embedding"], token[:, None])
     B = token.shape[0]
     pos = cache.pos
@@ -220,19 +281,35 @@ def _paged_decode_step(cfg: ModelConfig, params, token,
     pidx = jnp.clip(pos // ps, 0, cache.block_table.shape[1] - 1)
     mapped = cache.block_table[rows, pidx] >= 0
     need = adv & ~mapped
-    pages, free = paging.alloc_pages(cache.free, need)
+    pages, refcount = paging.alloc_pages(cache.refcount, need)
     fresh = need & (pages < P)
     bt = cache.block_table.at[rows, pidx].set(
         jnp.where(fresh, pages, cache.block_table[rows, pidx]))
+    # copy-on-write: a row writing into a SHARED page (refcount > 1 —
+    # a forked prefix page whose run was not page-aligned) privatizes it
+    # first; ``blocked`` rows found no free page and must drop the write
+    # (writing through the shared mapping would corrupt every sibling).
+    # NOTE: a blocked drop lands in a still-mapped entry, so it is NOT
+    # visible to ``engine/paging.dropped_tokens`` (which counts unmapped
+    # coverage holes) — callers relying on exact drop accounting must
+    # keep shared runs page-aligned so CoW stays unreachable.
+    if cow:
+        cow_src, cow_dst, blocked, refcount, bt = paging.cow_pages(
+            refcount, bt, pidx, adv & (bt[rows, pidx] >= 0))
+    else:
+        cow_src = cow_dst = None
+        blocked = jnp.zeros((B,), bool)
     wpage = bt[rows, pidx]                                  # (B,) may be -1
-    w_ok = adv & (wpage >= 0)
+    w_ok = adv & (wpage >= 0) & ~blocked
     wpage = jnp.where(w_ok, wpage, P)                       # OOB -> drop
     woff = pos % ps
     # a page normally gets mapped at woff == 0 and fills monotonically, so
     # recycled contents below the fill line are never valid. The exception
     # is recovery from transient pool exhaustion: writes dropped but pos
     # advanced, so the page maps mid-row — scrub it, or offsets < woff
-    # would expose the freed episode's K/V as live context
+    # would expose the freed episode's K/V as live context. (CoW dst
+    # pages are NOT scrubbed: their below-fill content is the copied
+    # shared prefix, which must stay.)
     scrub = jnp.where(fresh & (woff > 0), wpage, P)         # OOB -> drop
 
     def body(x, scanned):
@@ -240,7 +317,8 @@ def _paged_decode_step(cfg: ModelConfig, params, token,
         h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
         h, new_kv = L.paged_decode_attention(
             layer_p["attn"], h, kv_l, bt, pos, wpage=wpage, woff=woff,
-            scrub=scrub, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            scrub=scrub, cow_src=cow_src, cow_dst=cow_dst,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
             attn_impl=attn_impl)
         x = x + h
@@ -252,19 +330,24 @@ def _paged_decode_step(cfg: ModelConfig, params, token,
     x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
     head = params.get("lm_head", params["embedding"])
     logits = L.unembed(head, x)[:, 0]
-    return logits, PagedDecodeCache(kv=new_kv, block_table=bt, free=free,
+    return logits, PagedDecodeCache(kv=new_kv, block_table=bt,
+                                    refcount=refcount,
                                     pos=pos + adv.astype(jnp.int32))
 
 
 def decode_step(cfg: ModelConfig, params, token, cache, *,
-                extra=None, attn_impl: str = "xla", advance=None):
+                extra=None, attn_impl: str = "xla", advance=None,
+                cow: bool = True):
     """One decode step. token: (B,) int32. Returns (logits (B,V), cache).
     advance: optional (B,) bool — rows with False are no-ops (ragged
-    multi-turn rollout; see layers.decode_attention)."""
+    multi-turn rollout; see layers.decode_attention). cow: paged layout
+    only — False statically drops the copy-on-write guard (see
+    ``_paged_decode_step``); ignored by the dense layout."""
     del extra
     if isinstance(cache, PagedDecodeCache):
         return _paged_decode_step(cfg, params, token, cache,
-                                  attn_impl=attn_impl, advance=advance)
+                                  attn_impl=attn_impl, advance=advance,
+                                  cow=cow)
     x = L.embed(params["embedding"], token[:, None])
     pos = cache.pos
     B = token.shape[0]
@@ -314,7 +397,7 @@ def scan_body_over(step_fn):
 
 
 def decode_scan_body(cfg: ModelConfig, params, *, extra=None,
-                     attn_impl: str = "xla"):
+                     attn_impl: str = "xla", cow: bool = True):
     """Dense-family ``lax.scan`` body over decode steps (compiled
     rollout): ``scan_body_over`` bound directly to this module's
     ``decode_step`` (no registry indirection inside the scan)."""
@@ -322,4 +405,4 @@ def decode_scan_body(cfg: ModelConfig, params, *, extra=None,
     return scan_body_over(
         lambda token, advance, cache: decode_step(
             cfg, params, token, cache, attn_impl=attn_impl,
-            advance=advance))
+            advance=advance, cow=cow))

@@ -35,7 +35,10 @@ provides both the reference and the production-shaped implementation:
   - ``engine/paging.py``: refill-side page management for the paged KV
     cache layout (``cache_layout="paged"``) — slot refill releases the
     slot's pages back to a shared pool instead of zeroing a dense cache
-    row. See README.md in this directory for the layout trade-offs.
+    row, and (``share_prefix=True``) forks the pinned shared-prompt page
+    run into every refilled slot so the common prefix is prefilled once
+    per rollout, not once per episode (copy-on-write protected). See
+    README.md in this directory for the layout trade-offs.
 """
 from repro.rl.engine.common import ACTION_BASE, RolloutStats
 from repro.rl.engine.compiled import CompiledRolloutEngine

@@ -55,6 +55,11 @@ class RolloutStats:
     pages_in_use: int = 0           # peak pool occupancy over the rollout
     page_capacity: int = 0          # pool size in pages
     kv_dropped_writes: int = 0      # tokens whose KV write was dropped
+    # prefix sharing (0 = off): tokens of every episode's initial
+    # observation served from the ONE pinned prefix run instead of being
+    # prefilled per slot — both the per-wave FLOP cut and the
+    # pages_in_use reduction scale with this
+    shared_prefix_len: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -142,8 +147,8 @@ def sample_tokens(rng, logits, temperature: float):
 def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
               episodes_started: int, episodes_returned: int,
               params_version: int = -1, pages_in_use: int = 0,
-              page_capacity: int = 0,
-              kv_dropped_writes: int = 0) -> RolloutStats:
+              page_capacity: int = 0, kv_dropped_writes: int = 0,
+              shared_prefix_len: int = 0) -> RolloutStats:
     turn_lengths = np.asarray(turn_lengths)
     context_lengths = np.asarray(context_lengths)
     tl = turn_lengths[turn_lengths > 0]
@@ -161,4 +166,5 @@ def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
         pages_in_use=int(pages_in_use),
         page_capacity=int(page_capacity),
         kv_dropped_writes=int(kv_dropped_writes),
+        shared_prefix_len=int(shared_prefix_len),
     )

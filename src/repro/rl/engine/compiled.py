@@ -44,7 +44,23 @@ Telemetry: ``run(..., params_version=k)`` tags the resulting
 ``RolloutStats`` with the params version that generated the batch (the
 async pipeline schedule's policy-lag accounting), and paged layouts
 report peak pool occupancy + dropped KV writes instead of dropping
-writes silently (``RolloutStats.pages_in_use`` / ``kv_dropped_writes``).
+writes silently (``RolloutStats.pages_in_use`` / ``kv_dropped_writes``);
+``on_exhaust="raise"`` turns a non-zero drop counter into a hard error
+at the existing once-per-turn host sync.
+
+**Prefix sharing** (``share_prefix=True``, paged layout): every
+episode's initial observation opens with the env-declared common prefix
+(``env.prompt_prefix_len`` tokens — system prompt / tool schemas / GRPO
+group prompt). Its full pages are decoded ONCE through slot 0 at init,
+pinned by an engine-held refcount, and *forked* into every slot's block
+table — at init and again on every in-graph refill — so the dominant
+fixed prompt cost is paid once per rollout instead of once per episode.
+Refilled slots then feed only the per-episode suffix (a refill-only
+wave runs a short suffix scan instead of the full obs_len scan), while
+writes into shared pages are copy-on-write guarded. Greedy decode is
+bit-identical to the unshared engine: per-row model math is
+row-independent, so a forked page holds exactly the K/V the slot would
+have computed itself. See ``rl/engine/README.md``.
 """
 from __future__ import annotations
 
@@ -104,7 +120,10 @@ class CompiledRolloutEngine:
                  temperature: float = 1.0,
                  mesh_config=None, attn_impl: str = "xla",
                  cache_layout: str = "dense", page_size: int = 16,
-                 cache_pages: Optional[int] = None):
+                 cache_pages: Optional[int] = None,
+                 share_prefix: bool = False,
+                 prefix_len: Optional[int] = None,
+                 on_exhaust: str = "count"):
         cfg = model.cfg
         assert ACTION_BASE + env.n_actions <= cfg.vocab_size
         assert getattr(env, "jit_safe", False), (
@@ -117,6 +136,14 @@ class CompiledRolloutEngine:
             raise ValueError(
                 "attn_impl='paged' requires cache_layout='paged' (the "
                 "kernel reads the pool through the block table)")
+        if on_exhaust not in ("count", "raise"):
+            raise ValueError(f"on_exhaust must be 'count' or 'raise', got "
+                             f"{on_exhaust!r}")
+        if share_prefix and cache_layout != "paged":
+            raise ValueError(
+                "share_prefix requires cache_layout='paged' (sharing works "
+                "by forking pool pages across slots' block tables; dense "
+                "rows have nothing to fork)")
         self.model = model
         self.env = env
         self.max_turns = max_turns
@@ -127,6 +154,21 @@ class CompiledRolloutEngine:
         self.cache_layout = cache_layout
         self.page_size = page_size
         self.cache_pages = cache_pages      # None = full provisioning
+        self.on_exhaust = on_exhaust
+        self.share_prefix = share_prefix
+        # the shared run covers FULL pages of the episode-initial
+        # observation's common prefix, and never the whole observation:
+        # the per-slot feed must run at least one step so every slot's
+        # logits are its own post-observation distribution. prefix_len
+        # defaults to the env's declared contract (the leading tokens of
+        # EVERY episode's initial observation that are identical).
+        if prefix_len is None:
+            prefix_len = int(getattr(env, "prompt_prefix_len", 0))
+        self.prefix_len = prefix_len
+        self.shared_pages = (
+            min(prefix_len, env.obs_len - 1) // page_size
+            if share_prefix else 0)
+        self.shared_len = self.shared_pages * page_size
         self._mesh_config = mesh_config
         self._compiled: Dict[Tuple[Any, int, int, bool], Any] = {}
         # real source layout of the last harvested batch (Data Dispatcher
@@ -156,6 +198,13 @@ class CompiledRolloutEngine:
         attn_impl = self.attn_impl
         paged = self.cache_layout == "paged"
         page_size = self.page_size
+        shared_pages, shared_len = self.shared_pages, self.shared_len
+        # the copy-on-write guard costs an allocator pass + per-layer
+        # page copy per decode token; with sharing off no page can reach
+        # refcount > 1, so drop it statically (PR-3 configs unchanged).
+        # With sharing ON it stays armed as insurance even though the
+        # engine's page-aligned runs never trigger it.
+        cow_kw = {"cow": False} if paged and shared_pages == 0 else {}
         env_step = self._make_env_step(B)
         # envs usually declare reset_rows; the shared row-wise blend is
         # the fallback so a missing method isn't a runtime footgun
@@ -173,33 +222,44 @@ class CompiledRolloutEngine:
             return jnp.where(mask & (pos > 0), lp, 0.0)
 
         def feed_obs(decode, ref_decode, logits, cache, ref_logits,
-                     ref_cache, tokens, ref_lp_buf, pos, obs, mask):
+                     ref_cache, tokens, ref_lp_buf, pos, obs, mask,
+                     skip=None, n_skip: int = 0):
             """Teacher-force obs columns into ``mask`` rows (scan). The
             reference model (when folded in) consumes the same columns and
-            scores each before advancing."""
+            scores each before advancing. ``skip`` rows sit out the first
+            ``n_skip`` columns (their cache already holds those tokens —
+            the forked shared-prefix pages) and join at column
+            ``n_skip``, where their fill position already points."""
 
-            def body(carry, col):
+            def body(carry, x):
                 (logits, cache, ref_logits, ref_cache, tokens,
                  ref_lp_buf, pos) = carry
-                col = jnp.where(mask, col, TOK_PAD).astype(jnp.int32)
-                cidx = jnp.where(mask, pos, T)           # OOB write -> drop
+                if n_skip > 0:
+                    col, j = x
+                    m = mask & (~skip | (j >= n_skip))
+                else:
+                    col, m = x, mask
+                col = jnp.where(m, col, TOK_PAD).astype(jnp.int32)
+                cidx = jnp.where(m, pos, T)              # OOB write -> drop
                 tokens = tokens.at[rows, cidx].set(col, mode="drop")
                 if ref_decode is not None:
-                    rlp = ref_score(ref_logits, col, mask, pos)
+                    rlp = ref_score(ref_logits, col, m, pos)
                     ref_lp_buf = ref_lp_buf.at[rows, cidx].set(
                         rlp, mode="drop")
                     (ref_logits, ref_cache), _ = ref_decode(
-                        (ref_logits, ref_cache), (col, mask))
-                (logits, cache), _ = decode((logits, cache), (col, mask))
-                pos = pos + mask.astype(jnp.int32)
+                        (ref_logits, ref_cache), (col, m))
+                (logits, cache), _ = decode((logits, cache), (col, m))
+                pos = pos + m.astype(jnp.int32)
                 return (logits, cache, ref_logits, ref_cache, tokens,
                         ref_lp_buf, pos), None
 
             cols = jnp.swapaxes(jnp.asarray(obs, jnp.int32), 0, 1)
+            xs = ((cols, jnp.arange(cols.shape[0], dtype=jnp.int32))
+                  if n_skip > 0 else cols)
             (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
              pos), _ = lax.scan(
                 body, (logits, cache, ref_logits, ref_cache, tokens,
-                       ref_lp_buf, pos), cols)
+                       ref_lp_buf, pos), xs)
             return (logits, cache, ref_logits, ref_cache, tokens,
                     ref_lp_buf, pos)
 
@@ -241,28 +301,74 @@ class CompiledRolloutEngine:
             out, _ = lax.scan(body, init, krngs)
             return out
 
+        def write_prefix_tokens(tokens, obs, rows_mask):
+            """Bulk-write the (skipped) shared-prefix observation tokens
+            into ``rows_mask`` rows' context buffers: the harvested
+            episode must carry its full prompt even though the model
+            never re-consumed the prefix columns (the forked pages hold
+            their K/V)."""
+            pre = jnp.asarray(obs, jnp.int32)[:, :shared_len]
+            pad = jnp.pad(pre, ((0, 0), (0, T - shared_len)))
+            m = rows_mask[:, None] & (jnp.arange(T)[None, :] < shared_len)
+            return jnp.where(m, pad, tokens)
+
         def init_feed(params, ref_params, carry: slots.SlotCarry):
             """Feed the initial observation of every live slot (the
             engine's "prefill", run once before the macro-step loop)."""
-            decode = model.decode_scan_body(params, attn_impl=attn_impl)
+            decode = model.decode_scan_body(params, attn_impl=attn_impl,
+                                            **cow_kw)
             ref_decode = (model.decode_scan_body(ref_params)
                           if with_ref else None)
             obs = env.encode_obs(carry.env_state)
+            if shared_pages == 0:
+                (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
+                 pos) = feed_obs(
+                    decode, ref_decode, carry.logits, carry.cache,
+                    carry.ref_logits, carry.ref_cache, carry.tokens,
+                    carry.ref_logprobs, carry.pos, obs, carry.live)
+                return carry._replace(logits=logits, cache=cache,
+                                      ref_logits=ref_logits,
+                                      ref_cache=ref_cache, tokens=tokens,
+                                      ref_logprobs=ref_lp_buf, pos=pos)
+            # shared-prefix init: decode the common prefix through slot 0
+            # ONLY (per-row math is row-independent, so the pages slot 0
+            # fills hold bitwise the K/V any slot would have computed),
+            # pin the run, fork it into every live slot's block table,
+            # then feed just the per-slot suffix columns.
+            row0 = rows == 0                    # slot 0 is live (N >= 1)
             (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
              pos) = feed_obs(
                 decode, ref_decode, carry.logits, carry.cache,
                 carry.ref_logits, carry.ref_cache, carry.tokens,
-                carry.ref_logprobs, carry.pos, obs, carry.live)
+                carry.ref_logprobs, carry.pos, obs[:, :shared_len],
+                row0 & carry.live)
+            prefix_pages = cache.block_table[0, :shared_pages]
+            # engine-held pin; guard unmapped entries (pool exhausted
+            # during the slot-0 feed): -1 would WRAP, not drop
+            pin = jnp.where(prefix_pages >= 0, prefix_pages,
+                            cache.refcount.shape[0])
+            cache = cache._replace(
+                refcount=cache.refcount.at[pin].add(1, mode="drop"))
+            cache = paging.fork_prefix(cache, prefix_pages,
+                                       carry.live & ~row0, shared_len)
+            pos = jnp.where(carry.live, shared_len, pos)
+            tokens = write_prefix_tokens(tokens, obs, carry.live)
+            (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
+             pos) = feed_obs(
+                decode, ref_decode, logits, cache, ref_logits, ref_cache,
+                tokens, ref_lp_buf, pos, obs[:, shared_len:], carry.live)
             return carry._replace(logits=logits, cache=cache,
                                   ref_logits=ref_logits,
                                   ref_cache=ref_cache, tokens=tokens,
-                                  ref_logprobs=ref_lp_buf, pos=pos)
+                                  ref_logprobs=ref_lp_buf, pos=pos,
+                                  prefix_pages=prefix_pages)
 
         def turn_step(params, ref_params, carry: slots.SlotCarry, trng):
             # invariant: every live slot's observation is already fed (by
             # init_feed or the previous step's combined feed), so the turn
             # starts generating immediately
-            decode = model.decode_scan_body(params, attn_impl=attn_impl)
+            decode = model.decode_scan_body(params, attn_impl=attn_impl,
+                                            **cow_kw)
             ref_decode = (model.decode_scan_body(ref_params)
                           if with_ref else None)
             c = carry
@@ -338,7 +444,15 @@ class CompiledRolloutEngine:
             def do_reset(args):
                 cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf, \
                     pos, n_turns, tls, shortfall, state = args
-                return (_reset_cache_rows(cache, refill),
+                cache = _reset_cache_rows(cache, refill)
+                if shared_pages > 0:
+                    # fresh episode inherits the pinned shared-prefix run:
+                    # fork its pages into the freed slot's block table and
+                    # start the slot's own writes after them — the
+                    # prefix's KV is never recomputed for a refill
+                    cache = paging.fork_prefix(cache, c.prefix_pages,
+                                               refill, shared_len)
+                return (cache,
                         (_reset_cache_rows(ref_cache, refill)
                          if with_ref else ref_cache),
                         jnp.where(r1, TOK_PAD, tokens),
@@ -346,7 +460,7 @@ class CompiledRolloutEngine:
                         jnp.where(r1, 0.0, logprobs),
                         (jnp.where(r1, 0.0, ref_lp_buf)
                          if with_ref else ref_lp_buf),
-                        jnp.where(refill, 0, pos),
+                        jnp.where(refill, shared_len, pos),
                         jnp.where(refill, 0, n_turns),
                         jnp.where(r1, 0, tls),
                         jnp.where(refill, 0, shortfall),
@@ -362,7 +476,11 @@ class CompiledRolloutEngine:
             #    env observation, refilled rows their reset observation —
             #    a single scan over obs_len decode steps per macro-step,
             #    skipped entirely (lax.cond) when no row needs it (e.g.
-            #    the final drain step)
+            #    the final drain step). With prefix sharing, refilled rows
+            #    skip the shared columns (their forked pages already hold
+            #    that K/V); a refill-only wave — the common case under
+            #    churn — runs the SHORT suffix scan, which is where the
+            #    per-wave prefill-FLOP cut lands.
             cont = active & ~state2.done & ~finished
             feed_mask = cont | refill
 
@@ -371,9 +489,31 @@ class CompiledRolloutEngine:
                  pos) = args
                 obs = jnp.where(r1, env.encode_obs(state3),
                                 jnp.asarray(res.obs_tokens))
-                return feed_obs(decode, ref_decode, logits, cache,
-                                ref_logits, ref_cache, tokens, ref_lp_buf,
-                                pos, obs, feed_mask)
+                if shared_pages == 0:
+                    return feed_obs(decode, ref_decode, logits, cache,
+                                    ref_logits, ref_cache, tokens,
+                                    ref_lp_buf, pos, obs, feed_mask)
+                tokens = write_prefix_tokens(tokens, obs, refill)
+
+                def full(a):
+                    (logits, cache, ref_logits, ref_cache, tokens,
+                     ref_lp_buf, pos) = a
+                    return feed_obs(decode, ref_decode, logits, cache,
+                                    ref_logits, ref_cache, tokens,
+                                    ref_lp_buf, pos, obs, feed_mask,
+                                    skip=refill, n_skip=shared_len)
+
+                def suffix_only(a):
+                    (logits, cache, ref_logits, ref_cache, tokens,
+                     ref_lp_buf, pos) = a
+                    return feed_obs(decode, ref_decode, logits, cache,
+                                    ref_logits, ref_cache, tokens,
+                                    ref_lp_buf, pos, obs[:, shared_len:],
+                                    refill)
+
+                return lax.cond(jnp.any(cont), full, suffix_only,
+                                (logits, cache, ref_logits, ref_cache,
+                                 tokens, ref_lp_buf, pos))
 
             (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
              pos) = lax.cond(
@@ -404,6 +544,7 @@ class CompiledRolloutEngine:
                 pages_peak=pages_peak,
                 kv_dropped=kv_dropped,
                 kv_shortfall=kv_shortfall,
+                prefix_pages=c.prefix_pages,
             )
 
         return init_feed, turn_step
@@ -500,6 +641,8 @@ class CompiledRolloutEngine:
             pages_peak=rep,
             kv_dropped=rep,
             kv_shortfall=bs(carry_abs.kv_shortfall),
+            prefix_pages=(rep if carry_abs.prefix_pages is not None
+                          else None),
         )
 
     # -- carry init ---------------------------------------------------------
@@ -510,9 +653,17 @@ class CompiledRolloutEngine:
         state = env.reset(rng, B)
         live = jnp.arange(B) < N
         if self.cache_layout == "paged":
+            n_pages = self.cache_pages
+            if n_pages is None and self.shared_pages > 0:
+                # sharing-aware full provisioning: the shared run is one
+                # allocation, not one per slot — the default pool for
+                # share_prefix must not over-provision it batch x
+                from repro.models.paging import pool_pages_needed_shared
+                n_pages = pool_pages_needed_shared(
+                    B, T, self.shared_len, self.page_size)
             cache = model.init_cache(B, T, layout="paged",
                                      page_size=self.page_size,
-                                     n_pages=self.cache_pages)
+                                     n_pages=n_pages)
         else:
             cache = model.init_cache(B, T)
         return slots.SlotCarry(
@@ -542,6 +693,8 @@ class CompiledRolloutEngine:
             pages_peak=jnp.asarray(0, jnp.int32),
             kv_dropped=jnp.asarray(0, jnp.int32),
             kv_shortfall=jnp.zeros((B,), jnp.int32),
+            prefix_pages=(jnp.full((self.shared_pages,), -1, jnp.int32)
+                          if self.shared_pages > 0 else None),
         )
 
     # ------------------------------------------------------------------
@@ -559,6 +712,14 @@ class CompiledRolloutEngine:
         N = int(n_episodes) if n_episodes is not None else B
         assert N >= 1 and B >= 1
         with_ref = ref_params is not None
+        if with_ref and self.shared_pages > 0:
+            raise ValueError(
+                "share_prefix with in-graph ExpPrep (ref_params) is not "
+                "supported yet: the reference model's dense cache cannot "
+                "fork prefix pages, so refilled slots would skip tokens "
+                "the ref pass needs. Run the reference log-prob pass "
+                "separately (make_ref_logprob_step) or disable "
+                "share_prefix.")
 
         init_fn, turn_fn = self._get_compiled(B, N, with_ref)
         carry = init_fn(params, ref_params,
@@ -567,10 +728,23 @@ class CompiledRolloutEngine:
 
         # worst case: every wave of B episodes uses its full turn budget
         max_macro = self.max_turns * math.ceil(N / B) + 2
+        check_drops = self.on_exhaust == "raise" and \
+            self.cache_layout == "paged"
         for m in range(max_macro):
             carry = turn_fn(params, ref_params, carry,
                             common.turn_rng(base, m))
-            if int(carry.returned) >= N:     # ONE host sync per turn
+            # ONE host sync per turn (the returned-counter read); the
+            # on_exhaust="raise" drop check rides the same sync point
+            if check_drops and int(carry.kv_dropped) > 0:
+                raise RuntimeError(
+                    f"KV page pool exhausted during rollout: "
+                    f"{int(carry.kv_dropped)} dropped KV write(s) by "
+                    f"macro-step {m} (pool {int(carry.cache.refcount.shape[0])} "
+                    f"pages, peak in use {int(carry.pages_peak)}). The "
+                    f"affected episodes silently lost context; grow "
+                    f"cache_pages (see pool_pages_needed[_shared]) or set "
+                    f"on_exhaust='count' to tolerate truncation.")
+            if int(carry.returned) >= N:
                 break
 
         return self._finalize(carry, N, params_version)
@@ -603,6 +777,7 @@ class CompiledRolloutEngine:
             episodes_returned=int(carry.returned),
             params_version=params_version,
             pages_in_use=int(carry.pages_peak),
-            page_capacity=carry.cache.free.shape[0] if paged else 0,
-            kv_dropped_writes=int(carry.kv_dropped))
+            page_capacity=carry.cache.refcount.shape[0] if paged else 0,
+            kv_dropped_writes=int(carry.kv_dropped),
+            shared_prefix_len=self.shared_len)
         return exp, stats

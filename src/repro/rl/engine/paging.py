@@ -6,11 +6,16 @@ slot, and the row's memory stays allocated for the episode's *capacity*
 whether or not the episode ever grows that long. With the paged layout
 (``models/transformer.PagedDecodeCache``), refill instead *releases* the
 slot's pages back to the shared pool: an O(pages_per_slot) block-table /
-free-mask update with no touch of the KV data itself. Freed pages are
+refcount update with no touch of the KV data itself. Freed pages are
 immediately reusable by any slot, so pool memory tracks the *live*
 tokens across the batch — the continuous-batching memory model that lets
 ``n_pages`` be sized below ``B * pages_per_slot`` when episodes are
 shorter than ``max_context`` (see ``rl/engine/README.md``).
+
+Prefix sharing (PR 5) rides on the refcounts: release is a *decrement*,
+so the shared-prompt pages the engine forks into every refilled slot
+(``fork_prefix``) survive their owners — the engine holds one pinned
+reference on the prefix run, and a slot's death just drops its own ref.
 
 Everything here is pure ``jnp`` and runs inside the compiled macro-step.
 """
@@ -24,31 +29,49 @@ from repro.models import paging
 def is_paged(cache) -> bool:
     """Structural check usable on any family's cache pytree (the engine
     stays family-generic — no model imports)."""
-    return hasattr(cache, "block_table") and hasattr(cache, "free")
+    return hasattr(cache, "block_table") and hasattr(cache, "refcount")
 
 
 def release_slot_pages(cache, refill):
-    """Free every page owned by ``refill`` slots and reset their fill
-    position — the paged replacement for zeroing dense cache rows. The
-    stale page contents are never read again: a released page is invisible
-    (unmapped) until re-allocated; re-allocated pages normally map at
-    in-page offset 0 and fill monotonically under the ``pos``-derived
-    length masks, and the one exception — a page mapped mid-row while
-    recovering from transient pool exhaustion — is scrubbed at allocation
-    (``layers.paged_decode_attention``), so no cross-episode K/V ever
-    enters a validity window."""
-    free, block_table = paging.release_pages(cache.free, cache.block_table,
-                                             refill)
+    """Drop every page reference owned by ``refill`` slots and reset
+    their fill position — the paged replacement for zeroing dense cache
+    rows. The stale page contents are never read again: a released page
+    is invisible (unmapped) until re-allocated; re-allocated pages
+    normally map at in-page offset 0 and fill monotonically under the
+    ``pos``-derived length masks, and the one exception — a page mapped
+    mid-row while recovering from transient pool exhaustion — is scrubbed
+    at allocation (``layers.paged_decode_attention``), so no
+    cross-episode K/V ever enters a validity window. Pages shared with
+    surviving owners (forked prefix run, engine pin) keep ``refcount >=
+    1`` and stay live for everyone else."""
+    refcount, block_table = paging.release_pages(
+        cache.refcount, cache.block_table, refill)
     return cache._replace(
         block_table=block_table,
-        free=free,
+        refcount=refcount,
         pos=jnp.where(refill, 0, cache.pos),
+    )
+
+
+def fork_prefix(cache, prefix_pages, rows, prefix_len: int):
+    """Map the engine's pinned shared-prefix run into freshly released
+    ``rows`` and advance their fill position past it: the slot starts its
+    episode with the common prompt's full pages already in its block
+    table — no prefill compute, no copies. (The rows' own writes begin at
+    ``prefix_len``, which is page-aligned, so copy-on-write stays
+    latent; it exists for non-aligned forks.)"""
+    refcount, block_table = paging.fork_pages(
+        cache.refcount, cache.block_table, prefix_pages, rows)
+    return cache._replace(
+        block_table=block_table,
+        refcount=refcount,
+        pos=jnp.where(rows, prefix_len, cache.pos),
     )
 
 
 def pool_stats(cache):
     """(pages_in_use, n_pages) for occupancy telemetry."""
-    return paging.pages_in_use(cache.free), cache.free.shape[0]
+    return paging.pages_in_use(cache.refcount), cache.refcount.shape[0]
 
 
 def dropped_tokens(cache, page_size: int):

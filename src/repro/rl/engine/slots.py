@@ -76,6 +76,12 @@ class SlotCarry(NamedTuple):
     pages_peak: Any = None     # () int32 peak pool occupancy
     kv_dropped: Any = None     # () int32 cumulative dropped KV writes
     kv_shortfall: Any = None   # (B,) int32 current per-slot dropped tokens
+    # shared-prefix run (None when share_prefix is off): the pinned pool
+    # pages holding the common prompt's full pages, prefilled once at
+    # init and forked into every refilled slot (``engine/paging.
+    # fork_prefix``). The engine holds one reference on each so the run
+    # survives all its episode owners.
+    prefix_pages: Any = None   # (shared_pages,) int32 pool page indices
 
 
 def init_store(n_episodes: int, max_context: int,

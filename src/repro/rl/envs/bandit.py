@@ -12,6 +12,15 @@ gets exercised at maximum churn (every macro-step frees every slot).
 Token protocol: hint levels occupy ``TOK_OBS_BASE + [0, obs_levels)``;
 actions are the shared ``ACTION_BASE`` region like the board games.
 Rewards: +1 payout with probability ``mean[arm]``, else -1.
+
+``prompt_len`` prepends a fixed deterministic "system prompt" token run
+to every observation — the agentic-RL shape where each episode opens
+with the same instructions + tool schemas and only a short episode-
+specific suffix differs. ``prompt_prefix_len`` (= BOS + prompt) declares
+how much of the initial observation is identical across episodes, which
+is what the engine's copy-on-write prefix sharing forks across slots:
+with a long prompt and maximum churn this env is the shared-prompt
+benchmark regime (``benchmarks/bench_rollout``).
 """
 from __future__ import annotations
 
@@ -35,12 +44,17 @@ class MultiArmedBandit:
     jit_safe = True      # pure jnp: usable inside the compiled engine
 
     def __init__(self, n_arms: int = 5, hint_noise: float = 0.15,
-                 obs_levels: int = 4):
+                 obs_levels: int = 4, prompt_len: int = 0):
         self.n_actions = n_arms
         self.n_arms = n_arms
         self.hint_noise = hint_noise
         self.obs_levels = obs_levels
-        self.obs_len = n_arms + 3          # BOS + hints + result + TURN
+        self.prompt_len = prompt_len
+        # BOS + prompt + hints + result + TURN
+        self.obs_len = 1 + prompt_len + n_arms + 2
+        # BOS + the fixed prompt are identical for every episode; the
+        # hints that follow are per-episode draws
+        self.prompt_prefix_len = 1 + prompt_len
 
     def reset(self, rng, batch: int) -> BanditState:
         rng = jax.random.PRNGKey(0) if rng is None else rng
@@ -66,11 +80,19 @@ class MultiArmedBandit:
     def encode_obs(self, state: BanditState, result_tok=None):
         B = state.means.shape[0]
         bos = jnp.full((B, 1), TOK_BOS, jnp.int32)
+        parts = [bos]
+        if self.prompt_len > 0:
+            # fixed deterministic preamble, identical for every episode
+            pre = TOK_OBS_BASE + (jnp.arange(self.prompt_len,
+                                             dtype=jnp.int32)
+                                  % self.obs_levels)
+            parts.append(jnp.broadcast_to(pre[None, :],
+                                          (B, self.prompt_len)))
         hints = TOK_OBS_BASE + state.hints.astype(jnp.int32)
         res = (jnp.full((B, 1), TOK_TURN, jnp.int32)
                if result_tok is None else result_tok[:, None])
         turn = jnp.full((B, 1), TOK_TURN, jnp.int32)
-        return jnp.concatenate([bos, hints, res, turn], axis=1)
+        return jnp.concatenate(parts + [hints, res, turn], axis=1)
 
     def step(self, state: BanditState, actions, rng) -> tuple:
         """One pull ends the episode. actions: (B,) int32 in [0, n_arms)."""

@@ -16,7 +16,13 @@ Compiled-engine protocol: an env declares ``jit_safe = True`` when its
 ``reset`` / ``step`` / ``encode_obs`` are pure ``jnp`` (traceable inside
 ``jax.jit``), and provides ``reset_rows(rng, state, mask)`` — a pure
 row-wise reset used for in-graph slot refill (``default_reset_rows``
-below covers any env with batch-leading state leaves).
+below covers any env with batch-leading state leaves). Optionally it
+declares ``prompt_prefix_len``: the number of LEADING tokens of every
+episode's *initial* observation that are identical across episodes and
+rows (system prompt / rules / tool schemas). The compiled engine's
+copy-on-write prefix sharing (``share_prefix=True``) prefills those
+tokens once per rollout and forks the covering KV pages into every
+slot, so the contract must hold for every reset the env can produce.
 """
 from __future__ import annotations
 

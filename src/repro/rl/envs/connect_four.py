@@ -55,6 +55,9 @@ class ConnectFour:
     n_actions = COLS
     obs_len = 3 + ROWS * COLS    # BOS + 42 cells + result + turn marker - 42..
     jit_safe = True              # pure jnp: usable inside the compiled engine
+    # deterministic empty-board reset: the full initial observation is
+    # identical across episodes (engine prefix sharing)
+    prompt_prefix_len = 3 + ROWS * COLS
 
     def __init__(self):
         self.obs_len = 3 + ROWS * COLS

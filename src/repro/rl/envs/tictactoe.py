@@ -27,6 +27,10 @@ class TicTacToe:
     n_actions = 9
     obs_len = 12         # BOS + 9 cells + result/turn + turn marker
     jit_safe = True      # pure jnp: usable inside the compiled engine
+    # reset is deterministic (empty board), so EVERY episode's initial
+    # observation is identical end to end — the whole prompt is sharable
+    # across slots (engine prefix sharing, rl/engine/compiled.py)
+    prompt_prefix_len = obs_len
 
     def reset(self, rng, batch: int) -> TTTState:
         del rng

@@ -190,22 +190,22 @@ def test_page_allocator_rank_matching():
     """alloc/release invariants: distinct pages per needing row, sentinel
     on exhaustion, released pages immediately reusable."""
     from repro.models import paging
-    free = jnp.ones((4,), bool)
-    pages, free = paging.alloc_pages(free, jnp.array([True, False, True]))
+    rc = jnp.zeros((4,), jnp.int32)                  # refcount 0 == free
+    pages, rc = paging.alloc_pages(rc, jnp.array([True, False, True]))
     assert np.asarray(pages)[1] == 4                 # sentinel: no need
     assert len({int(pages[0]), int(pages[2])}) == 2  # distinct pages
-    assert int(paging.pages_in_use(free)) == 2
+    assert int(paging.pages_in_use(rc)) == 2
     # exhaust: 3 needing rows, 2 free pages -> one sentinel
-    pages2, free = paging.alloc_pages(free, jnp.array([True, True, True]))
+    pages2, rc = paging.alloc_pages(rc, jnp.array([True, True, True]))
     got = np.asarray(pages2)
     assert (got < 4).sum() == 2 and (got == 4).sum() == 1
-    assert int(paging.pages_in_use(free)) == 4
+    assert int(paging.pages_in_use(rc)) == 4
     # release row 0's pages through a block table; pool drains back
     bt = jnp.array([[int(pages[0]), int(pages[2])], [-1, -1]], jnp.int32)
-    free, bt = paging.release_pages(free, bt, jnp.array([True, False]))
-    assert int(paging.pages_in_use(free)) == 2
+    rc, bt = paging.release_pages(rc, bt, jnp.array([True, False]))
+    assert int(paging.pages_in_use(rc)) == 2
     assert (np.asarray(bt)[0] == -1).all()
-    pages3, _ = paging.alloc_pages(free, jnp.array([True, True]))
+    pages3, _ = paging.alloc_pages(rc, jnp.array([True, True]))
     assert (np.asarray(pages3) < 4).all()            # reuse succeeded
 
 
@@ -240,7 +240,7 @@ def test_paged_prefill_matches_dense_prefill(rng):
             page, off = bt[b, s // ps], s % ps
             assert page >= 0
             np.testing.assert_array_equal(kp[:, page, off], kd[:, b, s])
-    assert int((~pcache.free).sum()) == B * (-(-S // ps))
+    assert int((pcache.refcount > 0).sum()) == B * (-(-S // ps))
     # decode across the prefill boundary (first step lands mid-page)
     for t in range(S, CAP):
         ld, dcache = model.decode_step(params, toks[:, t], dcache)

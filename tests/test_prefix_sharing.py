@@ -1,0 +1,375 @@
+"""Copy-on-write prefix sharing: refcount allocator invariants, CoW
+aliasing safety, engine greedy parity shared vs unshared vs dense, and
+pool-exhaustion handling (``on_exhaust``).
+
+The sharing contract under test (PR 5): the first ``prompt_prefix_len``
+tokens of every episode's initial observation are identical, so the
+engine prefills their full pages ONCE (through slot 0), pins the run,
+and forks the pages into every slot — greedy decode must be
+*bit-identical* to the unshared engine (per-row model math is
+row-independent, so a forked page holds exactly the K/V the slot would
+have computed itself).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import paging
+from repro.rl.engine import CompiledRolloutEngine
+from repro.rl.envs import make_env
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs.base import get_smoke_config
+    from repro.models.registry import build_model
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# Refcount allocator invariants (property-based)
+# ---------------------------------------------------------------------------
+
+P, B, NP = 12, 4, 3
+
+
+def _check_invariants(rc, bt):
+    rc = np.asarray(rc)
+    bt = np.asarray(bt)
+    assert (rc >= 0).all(), rc
+    mapped, counts = np.unique(bt[bt >= 0], return_counts=True)
+    # 1. a page is never both free (refcount 0) and mapped
+    assert (rc[mapped] > 0).all(), (rc, bt)
+    # 2. refcount == number of block-table references (the difference
+    #    would be caller-held pins; none in this walk -> exact equality,
+    #    i.e. every op's refcount delta is exactly its mapping delta)
+    ref = np.zeros_like(rc)
+    ref[mapped] = counts
+    np.testing.assert_array_equal(rc, ref)
+
+
+def _random_walk(seed: int, n_ops: int = 25):
+    """Drive a random LEGAL op sequence (alloc / release / fork / cow)
+    against a small pool, checking the allocator invariants after every
+    op. Exhaustion is part of the walk (P < B * NP is reachable)."""
+    rr = np.random.RandomState(seed)
+    rc = jnp.zeros((P,), jnp.int32)
+    bt = jnp.full((B, NP), -1, jnp.int32)
+    for _ in range(n_ops):
+        op = rr.choice(["alloc", "alloc", "release", "fork", "cow"])
+        if op == "alloc":
+            # allocate into each chosen row's first unmapped entry
+            rows = rr.rand(B) < 0.6
+            entry = np.argmax(np.asarray(bt) < 0, axis=1)
+            free_entry = (np.asarray(bt) < 0).any(axis=1)
+            need = jnp.asarray(rows & free_entry)
+            pages, rc = paging.alloc_pages(rc, need)
+            ok = need & (pages < P)
+            bt = bt.at[jnp.arange(B), jnp.where(
+                ok, jnp.asarray(entry), NP)].set(pages, mode="drop")
+        elif op == "release":
+            rows = jnp.asarray(rr.rand(B) < 0.5)
+            rc, bt = paging.release_pages(rc, bt, rows)
+        elif op == "fork":
+            # fork a random row's leading run into rows whose leading
+            # entries are unmapped (the legal-use contract)
+            src = rr.randint(B)
+            k = rr.randint(1, NP + 1)
+            run_pages = bt[src, :k]
+            tgt = (rr.rand(B) < 0.5) & \
+                (np.asarray(bt)[:, :k] < 0).all(axis=1)
+            tgt[src] = False
+            rc, bt = paging.fork_pages(rc, bt, run_pages,
+                                       jnp.asarray(tgt))
+        else:  # cow
+            entry = jnp.asarray(rr.randint(0, NP, B))
+            rows = jnp.asarray(rr.rand(B) < 0.5)
+            src, dst, blocked, rc, bt = paging.cow_pages(
+                rc, bt, entry, rows)
+            # 3. CoW never leaves a written row aliased to a shared
+            #    page: either a private copy (refcount 1) or blocked
+            d = np.asarray(dst)
+            assert (np.asarray(rc)[d[d < P]] == 1).all()
+            assert not (np.asarray(blocked) & (d < P)).any()
+        _check_invariants(rc, bt)
+
+
+class TestRefcountInvariants:
+    """A random legal op sequence (alloc / fork / release / cow) must
+    keep the allocator's core invariants; each op's refcount delta is
+    exactly its mapping delta (conservation)."""
+
+    def test_random_op_sequences_fixed_seeds(self):
+        for seed in range(12):               # always runs (no hypothesis)
+            _random_walk(seed)
+
+    def test_random_op_sequences_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=40, deadline=None)
+        @given(seed=st.integers(0, 2 ** 16 - 1),
+               n_ops=st.integers(1, 30))
+        def run(seed, n_ops):
+            _random_walk(seed, n_ops)
+
+        run()
+
+    def test_fork_release_conserve_refcount(self):
+        rc = jnp.zeros((8,), jnp.int32)
+        bt = jnp.full((3, 2), -1, jnp.int32)
+        pages, rc = paging.alloc_pages(rc, jnp.array([True, False, False]))
+        bt = bt.at[0, 0].set(pages[0])
+        assert int(rc.sum()) == 1
+        rc, bt = paging.fork_pages(rc, bt, bt[0, :1],
+                                   jnp.array([False, True, True]))
+        assert int(rc.sum()) == 3                    # +1 per forked row
+        assert int(bt[1, 0]) == int(bt[2, 0]) == int(bt[0, 0])
+        rc, bt = paging.release_pages(rc, bt,
+                                      jnp.array([True, True, False]))
+        assert int(rc.sum()) == 1                    # -1 per released ref
+        assert int(bt[2, 0]) == int(pages[0])        # survivor still mapped
+        rc, bt = paging.release_pages(rc, bt,
+                                      jnp.array([False, False, True]))
+        assert int(rc.sum()) == 0                    # last owner frees
+
+    def test_cow_privatizes_shared_page(self):
+        rc = jnp.zeros((4,), jnp.int32)
+        bt = jnp.full((2, 1), -1, jnp.int32)
+        pages, rc = paging.alloc_pages(rc, jnp.array([True, False]))
+        bt = bt.at[0, 0].set(pages[0])
+        rc, bt = paging.fork_pages(rc, bt, pages[:1],
+                                   jnp.array([False, True]))
+        src, dst, blocked, rc, bt = paging.cow_pages(
+            rc, bt, jnp.zeros((2,), jnp.int32), jnp.array([False, True]))
+        assert int(src[1]) == int(pages[0]) and int(dst[1]) < 4
+        assert not bool(blocked.any())
+        assert int(bt[1, 0]) == int(dst[1]) != int(bt[0, 0])
+        np.testing.assert_array_equal(
+            np.asarray(rc)[[int(bt[0, 0]), int(bt[1, 0])]], [1, 1])
+        # private page (refcount 1): a second write does NOT copy again
+        src2, dst2, blocked2, rc, bt = paging.cow_pages(
+            rc, bt, jnp.zeros((2,), jnp.int32), jnp.array([True, True]))
+        assert (np.asarray(dst2) == 4).all() and not bool(blocked2.any())
+
+    def test_cow_pool_exhausted_blocks_write(self):
+        """No free page for the private copy -> the row must be told to
+        drop its write (writing through would corrupt the sibling)."""
+        rc = jnp.zeros((1,), jnp.int32)
+        bt = jnp.full((2, 1), -1, jnp.int32)
+        pages, rc = paging.alloc_pages(rc, jnp.array([True, False]))
+        rc, bt = paging.fork_pages(
+            rc, bt.at[0, 0].set(pages[0]), pages[:1],
+            jnp.array([False, True]))
+        src, dst, blocked, rc, bt = paging.cow_pages(
+            rc, bt, jnp.zeros((2,), jnp.int32), jnp.array([False, True]))
+        assert bool(blocked[1])
+        assert int(bt[1, 0]) == int(pages[0])        # mapping intact
+        assert int(rc[pages[0]]) == 2                # both refs survive
+
+    def test_pool_pages_needed_shared(self):
+        # 4 slots x 8 pages each, 3 of them shared: 4*5 private + 3
+        assert paging.pool_pages_needed_shared(4, 64, 24, 8) == 23
+        # no prefix -> same as full provisioning
+        assert paging.pool_pages_needed_shared(4, 64, 0, 8) == \
+            paging.pool_pages_needed(4, 64, 8)
+        # sub-page prefix shares nothing
+        assert paging.pool_pages_needed_shared(4, 64, 7, 8) == 32
+
+
+# ---------------------------------------------------------------------------
+# Model-level CoW: a decode write into a forked page must not alias
+# ---------------------------------------------------------------------------
+
+class TestModelCoW:
+    def test_decode_write_into_forked_page_copies(self, model_and_params):
+        """Fork row 0's PARTIAL last page into row 1 (a non-page-aligned
+        share, the case page-aligned engine sharing never produces), then
+        decode different tokens per row: the write must privatize the
+        page — row 0's KV bitwise unchanged, rows diverge, refcounts
+        1/1."""
+        model, params = model_and_params
+        B, S, CAP, ps = 2, 12, 32, 8
+        rng = jax.random.PRNGKey(3)
+        toks = jnp.broadcast_to(
+            jax.random.randint(rng, (1, CAP), 8, model.cfg.vocab_size),
+            (B, CAP))
+        _, cache = model.prefill(
+            params, toks[:, :S],
+            model.init_cache(B, CAP, layout="paged", page_size=ps),
+            shared_prefix_len=S)
+        # shared full page: entry 0; partial page: entry 1 (4/8 tokens)
+        # is private per row. Alias it by hand: drop row 1's copy and map
+        # row 0's partial page into row 1 (a legal refcount-2 state).
+        page0 = cache.block_table[0, 1]
+        page1 = cache.block_table[1, 1]
+        assert int(page0) != int(page1)
+        rc = cache.refcount.at[page1].add(-1).at[page0].add(1)
+        bt = cache.block_table.at[1, 1].set(page0)
+        cache = cache._replace(refcount=rc, block_table=bt)
+        shared_page = int(page0)
+        assert int(cache.refcount[shared_page]) == 2
+        k_before = np.asarray(cache.kv.k[:, shared_page], np.float32)
+
+        # both rows write at position 12 (offset 4 of the shared page) —
+        # BOTH must privatize (CoW has no "original owner": any write
+        # into a refcount>1 page copies; the orphaned source drains)
+        step_toks = jnp.array([9, 10], jnp.int32)
+        _, cache2 = model.decode_step(params, step_toks, cache)
+        p0 = int(cache2.block_table[0, 1])
+        p1 = int(cache2.block_table[1, 1])
+        assert shared_page not in (p0, p1) and p0 != p1
+        rc2 = np.asarray(cache2.refcount)
+        assert rc2[p0] == 1 and rc2[p1] == 1 and rc2[shared_page] == 0
+        # the copied prefix below the fill line matches the original...
+        k0 = np.asarray(cache2.kv.k[:, p0], np.float32)
+        k1 = np.asarray(cache2.kv.k[:, p1], np.float32)
+        np.testing.assert_array_equal(k0[:, :4], k_before[:, :4])
+        np.testing.assert_array_equal(k1[:, :4], k_before[:, :4])
+        # ...the source page itself was never touched by either write...
+        np.testing.assert_array_equal(
+            np.asarray(cache2.kv.k[:, shared_page], np.float32), k_before)
+        # ...and the new writes differ between rows (different tokens)
+        assert not np.array_equal(k0[:, 4], k1[:, 4])
+
+
+# ---------------------------------------------------------------------------
+# Engine: greedy parity shared vs unshared vs dense
+# ---------------------------------------------------------------------------
+
+ENGINE_KW = dict(max_turns=3, max_turn_tokens=4, max_context=96,
+                 temperature=0.0)
+
+
+class TestEnginePrefixSharing:
+    @pytest.mark.parametrize("env_kw,env_name", [
+        ({}, "tictactoe"),
+        ({"prompt_len": 16}, "bandit"),
+    ])
+    def test_greedy_bit_identical_shared_vs_unshared_vs_dense(
+            self, env_kw, env_name, model_and_params):
+        """share_prefix must be invisible to the trajectories: tokens,
+        logprobs, rewards, context lengths all BIT-identical to the
+        unshared paged engine and the dense engine, through slot churn
+        (n_episodes > batch exercises refill-time forking)."""
+        model, params = model_and_params
+        env = make_env(env_name, **env_kw)
+        kw = dict(ENGINE_KW, max_turns=1 if env_name == "bandit" else 3)
+        dense = CompiledRolloutEngine(model, env, **kw)
+        off = CompiledRolloutEngine(model, env, cache_layout="paged",
+                                    page_size=4, **kw)
+        on = CompiledRolloutEngine(model, env, cache_layout="paged",
+                                   page_size=4, share_prefix=True, **kw)
+        assert on.shared_pages > 0, (env_name, env.prompt_prefix_len)
+        B, N = 4, 9
+        rng = jax.random.PRNGKey(11)
+        ed, sd = dense.run(params, rng, B, n_episodes=N)
+        e1, s1 = off.run(params, rng, B, n_episodes=N)
+        e2, s2 = on.run(params, rng, B, n_episodes=N)
+        for a, b in ((ed, e2), (e1, e2)):
+            np.testing.assert_array_equal(np.asarray(a.tokens),
+                                          np.asarray(b.tokens))
+            np.testing.assert_array_equal(np.asarray(a.gen_mask),
+                                          np.asarray(b.gen_mask))
+            np.testing.assert_array_equal(np.asarray(a.logprobs),
+                                          np.asarray(b.logprobs))
+            np.testing.assert_array_equal(np.asarray(a.rewards),
+                                          np.asarray(b.rewards))
+            np.testing.assert_array_equal(np.asarray(a.context_len),
+                                          np.asarray(b.context_len))
+        assert s2.episodes_started == s2.episodes_returned == N
+        assert s1.kv_dropped_writes == s2.kv_dropped_writes == 0
+        # the memory headline: sharing strictly lowers peak occupancy
+        assert s2.pages_in_use < s1.pages_in_use
+        assert s2.shared_prefix_len == on.shared_len > 0
+
+    def test_python_reference_parity(self, model_and_params):
+        """The sharing engine still matches the python-loop reference
+        (transitively covered by the dense comparison above, but pin the
+        cross-engine contract directly)."""
+        from repro.rl.rollout import RolloutEngine
+        model, params = model_and_params
+        env = make_env("tictactoe")
+        py = RolloutEngine(model, env, **ENGINE_KW)
+        on = CompiledRolloutEngine(model, env, cache_layout="paged",
+                                   page_size=4, share_prefix=True,
+                                   **ENGINE_KW)
+        rng = jax.random.PRNGKey(42)
+        e1, s1 = py.run(params, rng, 4)
+        e2, s2 = on.run(params, rng, 4)
+        np.testing.assert_array_equal(np.asarray(e1.tokens),
+                                      np.asarray(e2.tokens))
+        np.testing.assert_array_equal(np.asarray(e1.rewards),
+                                      np.asarray(e2.rewards))
+        np.testing.assert_allclose(np.asarray(e1.logprobs),
+                                   np.asarray(e2.logprobs),
+                                   atol=1e-4, rtol=1e-3)
+        np.testing.assert_array_equal(s1.n_turns, s2.n_turns)
+
+    def test_default_pool_sizing_never_drops(self, model_and_params):
+        """cache_pages=None with share_prefix uses the sharing-aware
+        full provisioning (pool_pages_needed_shared) — smaller than
+        batch x pages_per_slot yet exhaustion-free through heavy churn."""
+        model, params = model_and_params
+        env = make_env("bandit", prompt_len=16)
+        on = CompiledRolloutEngine(model, env, max_turns=1,
+                                   max_turn_tokens=2, max_context=64,
+                                   temperature=1.0, cache_layout="paged",
+                                   page_size=4, share_prefix=True)
+        B, N = 4, 16
+        _, stats = on.run(params, jax.random.PRNGKey(5), B, n_episodes=N)
+        full = paging.pool_pages_needed(B, 64, 4)
+        assert stats.page_capacity == paging.pool_pages_needed_shared(
+            B, 64, on.shared_len, 4) < full
+        assert stats.kv_dropped_writes == 0
+        assert stats.episodes_returned == N
+
+    def test_share_prefix_requires_paged(self, model_and_params):
+        model, params = model_and_params
+        with pytest.raises(ValueError, match="share_prefix"):
+            CompiledRolloutEngine(model, make_env("tictactoe"),
+                                  share_prefix=True, **ENGINE_KW)
+
+    def test_share_prefix_rejects_folded_ref(self, model_and_params):
+        model, params = model_and_params
+        on = CompiledRolloutEngine(model, make_env("tictactoe"),
+                                   cache_layout="paged", page_size=4,
+                                   share_prefix=True, **ENGINE_KW)
+        with pytest.raises(ValueError, match="ref_params"):
+            on.run(params, jax.random.PRNGKey(0), 2, ref_params=params)
+
+
+# ---------------------------------------------------------------------------
+# Pool exhaustion handling
+# ---------------------------------------------------------------------------
+
+class TestOnExhaust:
+    def _tiny_pool_engine(self, model, **kw):
+        env = make_env("bandit")
+        # pool fits ONE slot's episode; batch 3 must exhaust it
+        return CompiledRolloutEngine(
+            model, env, max_turns=1, max_turn_tokens=2, max_context=32,
+            temperature=1.0, cache_layout="paged", page_size=8,
+            cache_pages=2, **kw)
+
+    def test_raise_on_dropped_writes(self, model_and_params):
+        model, params = model_and_params
+        eng = self._tiny_pool_engine(model, on_exhaust="raise")
+        with pytest.raises(RuntimeError, match="pool exhausted"):
+            eng.run(params, jax.random.PRNGKey(1), 3, n_episodes=3)
+
+    def test_count_records_telemetry(self, model_and_params):
+        model, params = model_and_params
+        eng = self._tiny_pool_engine(model)      # default: count
+        _, stats = eng.run(params, jax.random.PRNGKey(1), 3, n_episodes=3)
+        assert stats.kv_dropped_writes > 0
+        assert stats.episodes_returned == 3
+
+    def test_invalid_mode_rejected(self, model_and_params):
+        model, _ = model_and_params
+        with pytest.raises(ValueError, match="on_exhaust"):
+            self._tiny_pool_engine(model, on_exhaust="explode")
