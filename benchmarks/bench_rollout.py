@@ -31,12 +31,19 @@ Three regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
         [--batches 2,8] [--max-turns 3] [--repeats 3]
         [--churn-mult 4] [--page-size 8] [--prompt-len 40]
 
+The churn and shared regimes carry a ``kv_dtype`` column: paged pools
+run at bf16 (default), fp32 and int8 element types. ``cache_kib`` is
+computed from the *actual* allocated cache pytree (dtype itemsizes
+included), so the int8 rows account for their f32 per-entry scale
+tensors — the capacity headline is honest about the scale overhead.
+
 CSV (grid):  backend,env,batch,max_turns,episodes,gen_tokens,seconds,
              tokens_per_s
-CSV (churn): layout,env,batch,episodes,gen_tokens,seconds,tokens_per_s,
-             cache_kib,equal_mem_batch_ctx
-CSV (shared): share_prefix,env,batch,episodes,gen_tokens,seconds,
-             tokens_per_s,peak_pages,pool_pages,shared_prefix_len
+CSV (churn): layout,kv_dtype,env,batch,episodes,gen_tokens,seconds,
+             tokens_per_s,cache_kib,equal_mem_batch_ctx
+CSV (shared): share_prefix,kv_dtype,env,batch,episodes,gen_tokens,
+             seconds,tokens_per_s,peak_pages,pool_pages,
+             shared_prefix_len
 
 ``main`` returns the rows as a dict so ``benchmarks/run.py`` can write
 ``BENCH_rollout.json`` for cross-PR perf tracking.
@@ -133,46 +140,60 @@ def _churn_section(args, model, params):
     batches = [int(b) for b in args.batches.split(",")]
     print("\n# churn regime: bandit, n_episodes = "
           f"{args.churn_mult} x batch (every macro-step refills)")
-    print("# layout,env,batch,episodes,gen_tokens,seconds,tokens_per_s,"
-          "cache_kib,equal_mem_batch_ctx")
+    print("# layout,kv_dtype,env,batch,episodes,gen_tokens,seconds,"
+          "tokens_per_s,cache_kib,equal_mem_batch_ctx")
     rows = []
     for B in batches:
         N = args.churn_mult * B
         # paged pool sized to LIVE tokens (episodes never outgrow `peak`),
         # not to the B * max_context capacity the dense layout must allocate
         pool = B * paging.pages_per_slot(peak, ps)
-        layouts = {
-            "dense": dict(cache_layout="dense"),
-            "paged": dict(cache_layout="paged", page_size=ps,
-                          cache_pages=pool),
-        }
+        paged_kw = dict(cache_layout="paged", page_size=ps,
+                        cache_pages=pool)
+        configs = [
+            ("dense", "bf16", dict(cache_layout="dense")),
+            ("paged", "bf16", paged_kw),
+            ("paged", "fp32", dict(paged_kw, kv_dtype="fp32")),
+            ("paged", "int8", dict(paged_kw, kv_dtype="int8")),
+        ]
         dense_bytes = _cache_bytes(model, B, T)
-        for name, lkw in layouts.items():
+        by_dt = {}
+        for name, dt, lkw in configs:
             eng = CompiledRolloutEngine(
                 model, env, max_turns=1, max_turn_tokens=mtt,
                 max_context=T, temperature=1.0, **lkw)
             toks, secs, _ = _bench_engine(eng, params, B, args.repeats,
                                           n_episodes=N)
             tps = toks / max(secs, 1e-9)
+            # footprint from the ACTUAL cache pytree: int8 pools include
+            # their f32 per-entry scale tensors in the byte count
             cb = _cache_bytes(model, B, T, **(
-                dict(layout="paged", page_size=ps, n_pages=pool)
-                if name == "paged" else {}))
+                dict(layout="paged", page_size=ps, n_pages=pool,
+                     kv_dtype=dt) if name == "paged" else {}))
             # batch x context product this layout admits inside the DENSE
             # KV budget (the continuous-batching memory headline)
             equal_mem = int(B * T * dense_bytes / max(cb, 1))
-            rows.append(dict(layout=name, env="bandit", batch=B,
-                             episodes=N, gen_tokens=toks,
+            rows.append(dict(layout=name, kv_dtype=dt, env="bandit",
+                             batch=B, episodes=N, gen_tokens=toks,
                              seconds=round(secs, 3),
                              tokens_per_s=round(tps, 1),
                              cache_kib=round(cb / 1024, 1),
                              equal_mem_batch_ctx=equal_mem))
-            print(f"{name},bandit,{B},{N},{toks},{secs:.3f},{tps:.1f},"
+            print(f"{name},{dt},bandit,{B},{N},{toks},{secs:.3f},{tps:.1f},"
                   f"{cb / 1024:.1f},{equal_mem}")
-        d, p = rows[-2], rows[-1]
+            if name == "paged":
+                by_dt[dt] = rows[-1]
+        d, p = rows[-4], by_dt["bf16"]
         ratio = p["equal_mem_batch_ctx"] / max(d["equal_mem_batch_ctx"], 1)
         print(f"# batch={B}: paged admits {ratio:.1f}x the batch*ctx of "
               f"dense at equal memory ({d['cache_kib']:.0f} KiB vs "
               f"{p['cache_kib']:.0f} KiB)")
+        f32, i8 = by_dt["fp32"], by_dt["int8"]
+        cap = i8["equal_mem_batch_ctx"] / max(f32["equal_mem_batch_ctx"], 1)
+        print(f"# batch={B}: int8 pages admit {cap:.1f}x the batch*ctx of "
+              f"fp32 at equal pool memory, tokens/s "
+              f"{i8['tokens_per_s'] / max(f32['tokens_per_s'], 1e-9):.2f}x "
+              f"of the fp32 paged baseline")
     return rows
 
 
@@ -199,7 +220,7 @@ def _shared_prefix_section(args, model, params):
           f"{args.prompt_len} (obs {env.obs_len} tokens, "
           f"{env.prompt_prefix_len} shared), n_episodes = "
           f"{args.churn_mult} x batch, equal pool memory")
-    print("# share_prefix,env,batch,episodes,gen_tokens,seconds,"
+    print("# share_prefix,kv_dtype,env,batch,episodes,gen_tokens,seconds,"
           "tokens_per_s,peak_pages,pool_pages,shared_prefix_len")
     rows = []
     for B in batches:
@@ -208,31 +229,35 @@ def _shared_prefix_section(args, model, params):
         # engine runs inside the same budget (the win must not come from
         # a bigger pool)
         pool = B * paging.pages_per_slot(peak, ps)
-        for share in (False, True):
-            eng = CompiledRolloutEngine(
-                model, env, max_turns=1, max_turn_tokens=mtt,
-                max_context=T, temperature=1.0, cache_layout="paged",
-                page_size=ps, cache_pages=pool, share_prefix=share)
-            toks, secs, stats = _bench_engine(eng, params, B, args.repeats,
-                                              n_episodes=N)
-            tps = toks / max(secs, 1e-9)
-            rows.append(dict(share_prefix=share, env="bandit", batch=B,
-                             episodes=N, gen_tokens=toks,
-                             seconds=round(secs, 3),
-                             tokens_per_s=round(tps, 1),
-                             peak_pages=stats.pages_in_use,
-                             pool_pages=stats.page_capacity,
-                             kv_dropped_writes=stats.kv_dropped_writes,
-                             shared_prefix_len=stats.shared_prefix_len))
-            print(f"{share},bandit,{B},{N},{toks},{secs:.3f},{tps:.1f},"
-                  f"{stats.pages_in_use},{stats.page_capacity},"
-                  f"{stats.shared_prefix_len}")
-        off, on = rows[-2], rows[-1]
-        print(f"# batch={B}: share_prefix "
-              f"{on['tokens_per_s'] / max(off['tokens_per_s'], 1e-9):.2f}x "
-              f"tokens/s, peak pages {off['peak_pages']} -> "
-              f"{on['peak_pages']} at equal pool "
-              f"({off['pool_pages']} pages)")
+        for dt in ("bf16", "int8"):
+            for share in (False, True):
+                eng = CompiledRolloutEngine(
+                    model, env, max_turns=1, max_turn_tokens=mtt,
+                    max_context=T, temperature=1.0, cache_layout="paged",
+                    page_size=ps, cache_pages=pool, share_prefix=share,
+                    kv_dtype=dt)
+                toks, secs, stats = _bench_engine(
+                    eng, params, B, args.repeats, n_episodes=N)
+                tps = toks / max(secs, 1e-9)
+                rows.append(dict(share_prefix=share, kv_dtype=dt,
+                                 env="bandit", batch=B,
+                                 episodes=N, gen_tokens=toks,
+                                 seconds=round(secs, 3),
+                                 tokens_per_s=round(tps, 1),
+                                 peak_pages=stats.pages_in_use,
+                                 pool_pages=stats.page_capacity,
+                                 kv_dropped_writes=stats.kv_dropped_writes,
+                                 shared_prefix_len=stats.shared_prefix_len))
+                print(f"{share},{dt},bandit,{B},{N},{toks},{secs:.3f},"
+                      f"{tps:.1f},{stats.pages_in_use},"
+                      f"{stats.page_capacity},{stats.shared_prefix_len}")
+            off, on = rows[-2], rows[-1]
+            print(f"# batch={B} kv_dtype={dt}: share_prefix "
+                  f"{on['tokens_per_s'] / max(off['tokens_per_s'], 1e-9):.2f}"
+                  f"x tokens/s, peak pages {off['peak_pages']} -> "
+                  f"{on['peak_pages']} at equal pool "
+                  f"({off['pool_pages']} pages), dropped writes "
+                  f"{off['kv_dropped_writes']} -> {on['kv_dropped_writes']}")
     return rows
 
 

@@ -153,6 +153,7 @@ class PipelineSchedule:
                     del versions[old]
 
                 t0 = time.perf_counter()
+                tr._maybe_warn_ref_fallback(ref_params)
                 exp, stats, switch = tr.rollout_stage(
                     k, behavior, tr._next_rng(), tr.batch_size,
                     n_episodes=tr.rollout_episodes,

@@ -38,6 +38,7 @@ the user-facing driver. Every stage transition stays observable: per-step
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -251,11 +252,15 @@ class EarlTrainer:
     advantage: str = "reinforce"            # "reinforce" | "group"
     group_size: int = 4
     temperature: float = 1.0
+    top_p: float = 1.0                      # nucleus sampling (1.0 = off)
+    sampling: str = "reference"             # compiled: | "fused" (one-pass
+                                            # sample-and-write kernel)
     rollout_backend: str = "python"         # "python" | "compiled"
     rollout_episodes: Optional[int] = None  # compiled: episodes per rollout
     cache_layout: str = "dense"             # compiled: "dense" | "paged"
     page_size: int = 16                     # paged: tokens per KV page
     cache_pages: Optional[int] = None       # paged: pool size (None = full)
+    kv_dtype: str = "bf16"                  # "fp32"|"bf16"|"int8" (paged)
     share_prefix: bool = False              # paged: fork shared-prompt pages
     prefix_len: Optional[int] = None        # None = env.prompt_prefix_len
     on_exhaust: str = "count"               # "count" | "raise" on pool drop
@@ -272,7 +277,8 @@ class EarlTrainer:
         assert self.pipeline in ("sync", "async"), self.pipeline
         kw = dict(max_turns=self.max_turns,
                   max_turn_tokens=self.max_turn_tokens,
-                  max_context=self.max_context, temperature=self.temperature)
+                  max_context=self.max_context,
+                  temperature=self.temperature, top_p=self.top_p)
         if self.rollout_backend == "compiled":
             # generation programs compile per MeshConfig; start on the
             # selector's current config when it is already profiled
@@ -282,7 +288,8 @@ class EarlTrainer:
             self.rollout = CompiledRolloutEngine(
                 self.model, self.env, mesh_config=mesh_cfg,
                 cache_layout=self.cache_layout, page_size=self.page_size,
-                cache_pages=self.cache_pages,
+                cache_pages=self.cache_pages, kv_dtype=self.kv_dtype,
+                sampling=self.sampling,
                 share_prefix=self.share_prefix, prefix_len=self.prefix_len,
                 on_exhaust=self.on_exhaust, **kw)
         elif self.rollout_backend == "python":
@@ -300,6 +307,16 @@ class EarlTrainer:
                     "share_prefix requires rollout_backend='compiled' "
                     "with cache_layout='paged' (prefix sharing forks "
                     "pool pages inside the compiled macro-step)")
+            if self.kv_dtype != "bf16":
+                raise ValueError(
+                    "kv_dtype requires rollout_backend='compiled' (the "
+                    "python reference engine always decodes against the "
+                    "default bf16 dense cache)")
+            if self.sampling != "reference":
+                raise ValueError(
+                    "sampling='fused' requires rollout_backend='compiled' "
+                    "(the fused sample-and-write step lives in the "
+                    "compiled decode scan)")
             self.rollout = RolloutEngine(self.model, self.env, **kw)
         else:
             raise ValueError(
@@ -309,7 +326,9 @@ class EarlTrainer:
         # reference pass keeps a dense cache and cannot skip the shared
         # columns, so a sharing engine falls back to the standalone
         # ExpPrep ref program instead of folding the ref into the rollout
+        # (announced once via _maybe_warn_ref_fallback when it first bites)
         self.ref_folded = not getattr(self.rollout, "shared_pages", 0)
+        self._warned_ref_fallback = False
         self.rollout_stage = RolloutStage(self.rollout, self.selector)
         self.expprep_stage = ExpPrepStage(
             self.model, advantage=self.advantage,
@@ -362,11 +381,32 @@ class EarlTrainer:
         self.history.append(rec)
         return rec
 
+    def _maybe_warn_ref_fallback(self, ref_params) -> None:
+        """One-time structured warning when a reference pass is requested
+        but the in-graph fold is unavailable: the silent switch to the
+        standalone ExpPrep ref program (share_prefix leftover) must name
+        its reason instead of just happening."""
+        if ref_params is None or self.ref_folded \
+                or self._warned_ref_fallback:
+            return
+        self._warned_ref_fallback = True
+        warnings.warn(
+            "EarlTrainer: reference log-probs will come from the "
+            "STANDALONE ExpPrep program, not the in-graph rollout fold "
+            "(reason: share_prefix=True — the reference model's dense "
+            f"cache cannot fork the {self.rollout.shared_len}-token "
+            "shared prefix run, so folding ref_params into the compiled "
+            "macro-step is unsupported; see rl/engine/README.md). The "
+            "ref pass re-decodes each harvested context in a separate "
+            "program per step.",
+            RuntimeWarning, stacklevel=3)
+
     # ------------------------------------------------------------------
     def run_step(self, step: int, params, opt_state, ref_params=None,
                  dst_shardings=None):
         """One full Fig. 2 iteration, synchronously: Rollout → ExpPrep →
         Dispatch → Update. Returns (params, opt_state, record)."""
+        self._maybe_warn_ref_fallback(ref_params)
         t0 = time.perf_counter()
 
         # ① Rollout (+ folded ref pass). Both engines share the run

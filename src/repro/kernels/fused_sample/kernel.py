@@ -1,0 +1,123 @@
+"""One-pass token sampling for the decode loop (TPU Pallas).
+
+The sampler the rollout engine's fused sample-and-write step runs on the
+final-layer logits: ONE streaming pass over the vocab axis computes both
+the sampled token (Gumbel-argmax over noise-perturbed logits — greedy
+when the noise is zero) and its log-probability (online logsumexp of the
+clean logits, plus the logit value carried with the running argmax). The
+reference path materializes softmax intermediates and reads the logits
+twice (categorical + token log-prob); this kernel reads each vocab block
+once and keeps five scalars of state per row.
+
+Temperature and top-p are applied to the logits BEFORE the kernel (they
+are cheap elementwise/sort work and keeping them outside preserves exact
+``common.sample_tokens`` semantics); the kernel itself is mode-agnostic.
+
+In-kernel PRNG (``pltpu.prng_random_bits``) is unavailable in CPU
+interpret mode, so the Gumbel noise is a regular operand generated with
+``jax.random`` by the wrapper — which also makes temperature sampling
+bitwise ``jax.random.categorical`` (same key, same noise). A TPU-only
+follow-on can seed the PRNG in-kernel and drop the operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fused_sample_kernel(lg_ref, noise_ref, tok_ref, lp_ref,
+                         m_ref, l_ref, bs_ref, bi_ref, bl_ref, *, bv,
+                         n_blocks):
+    v = pl.program_id(1)
+
+    @pl.when(v == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        bs_ref[...] = jnp.full_like(bs_ref, NEG_INF)
+        bi_ref[...] = jnp.zeros_like(bi_ref)
+        bl_ref[...] = jnp.full_like(bl_ref, NEG_INF)
+
+    lg = lg_ref[0].astype(jnp.float32)                      # (bv,)
+    noise = noise_ref[0].astype(jnp.float32)
+
+    # online logsumexp of the clean logits (the log-prob denominator)
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(lg))
+    l_ref[0] = l_ref[0] * jnp.exp(m_prev - m_new) \
+        + jnp.sum(jnp.exp(lg - m_new))
+    m_ref[0] = m_new
+
+    # running argmax of the perturbed logits, carrying the winner's CLEAN
+    # logit for the numerator. Strict > keeps the earliest max on ties —
+    # the same tie-break as a global argmax.
+    score = lg + noise
+    barg = jnp.argmax(score)
+    bmax = jnp.max(score)
+    blog = jnp.sum(jnp.where(
+        jax.lax.broadcasted_iota(jnp.int32, (bv,), 0) == barg, lg, 0.0))
+    better = bmax > bs_ref[0]
+    bs_ref[0] = jnp.where(better, bmax, bs_ref[0])
+    bi_ref[0] = jnp.where(better, v * bv + barg.astype(jnp.int32),
+                          bi_ref[0])
+    bl_ref[0] = jnp.where(better, blog, bl_ref[0])
+
+    @pl.when(v == n_blocks - 1)
+    def _finish():
+        tok_ref[0, 0] = bi_ref[0]
+        lp_ref[0, 0] = bl_ref[0] - (m_ref[0] + jnp.log(l_ref[0]))
+
+
+def fused_sample_bkgd(lg, noise, *, block_v: int = 1024, interpret=False):
+    """lg: (B, V) f32 logits (already tempered / top-p masked); noise:
+    (B, V) f32 additive perturbation (Gumbel; zeros = greedy). Returns
+    ``(tokens (B,) int32, logprobs (B,) f32)`` with ``tokens = argmax(lg
+    + noise)`` and ``logprobs = lg[tok] - logsumexp(lg)``."""
+    B, V = lg.shape
+    bv = min(block_v, V)
+    n_blocks = -(-V // bv)
+    pad = n_blocks * bv - V
+    if pad:
+        # NEG_INF logit pad: zero mass in the logsumexp, never the argmax
+        lg = jnp.pad(lg, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        noise = jnp.pad(noise, ((0, 0), (0, pad)))
+    kernel = functools.partial(_fused_sample_kernel, bv=bv,
+                               n_blocks=n_blocks)
+
+    def blk_map(b, v):
+        return (b, v)
+
+    def row_map(b, v):
+        return (b, 0)
+
+    tok, lp = pl.pallas_call(
+        kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bv), blk_map),
+            pl.BlockSpec((1, bv), blk_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), row_map),
+            pl.BlockSpec((1, 1), row_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),      # running max m
+            pltpu.VMEM((1,), jnp.float32),      # running sum l
+            pltpu.VMEM((1,), jnp.float32),      # best perturbed score
+            pltpu.VMEM((1,), jnp.int32),        # best token index
+            pltpu.VMEM((1,), jnp.float32),      # best clean logit
+        ],
+        interpret=interpret,
+    )(lg.astype(jnp.float32), noise.astype(jnp.float32))
+    return tok[:, 0], lp[:, 0]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused sampling kernel.
+
+Same contract as ``kernel.fused_sample_bkgd``: Gumbel-argmax token
+selection plus the token's log-probability from the clean logits — the
+two-read materialized form the kernel computes in one streaming pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fused_sample_ref(lg, noise):
+    """lg, noise: (B, V) f32. Returns (tokens (B,) i32, logprobs (B,) f32)
+    with ``tokens = argmax(lg + noise)``, ``logprobs = lg[tok] -
+    logsumexp(lg)``."""
+    lg = jnp.asarray(lg).astype(jnp.float32)
+    tok = jnp.argmax(lg + jnp.asarray(noise).astype(jnp.float32),
+                     axis=-1).astype(jnp.int32)
+    lp = jnp.take_along_axis(lg, tok[:, None], axis=-1)[:, 0] \
+        - jax.scipy.special.logsumexp(lg, axis=-1)
+    return tok, lp

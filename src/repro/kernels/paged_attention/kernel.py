@@ -31,9 +31,12 @@ NEG_INF = -1e30
 
 
 def _paged_decode_kernel(bt_safe_ref, bt_ref, len_ref, q_ref, k_ref, v_ref,
-                         o_ref, m_ref, l_ref, acc_ref, *, scale, ps,
-                         n_pages_grid):
+                         *refs, scale, ps, n_pages_grid, quantized):
     del bt_safe_ref                    # consumed by the BlockSpec index maps
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     group = q_ref.shape[2]
     b = pl.program_id(0)
     p = pl.program_id(2)
@@ -47,6 +50,14 @@ def _paged_decode_kernel(bt_safe_ref, bt_ref, len_ref, q_ref, k_ref, v_ref,
     q = q_ref[0, 0].astype(jnp.float32) * scale            # (group, hd)
     k_blk = k_ref[0, :, 0].astype(jnp.float32)             # (ps, hd)
     v_blk = v_ref[0, :, 0].astype(jnp.float32)
+    if quantized:
+        # fused dequant: int8 page values scaled in-register by the
+        # per-(offset, kv-head) f32 scales that rode the same block-table
+        # index map — this is exactly ``paging.dequantize_kv``, applied
+        # before the online-softmax update, so no fp32 page is ever
+        # materialized in HBM
+        k_blk = k_blk * ks_ref[0, :, 0][:, None]
+        v_blk = v_blk * vs_ref[0, :, 0][:, None]
 
     # absolute positions held by this page of the row's block table;
     # a partially filled last page and unmapped entries mask the same way
@@ -74,16 +85,20 @@ def _paged_decode_kernel(bt_safe_ref, bt_ref, len_ref, q_ref, k_ref, v_ref,
 
 
 def paged_decode_attention_bkgd(q, k_pages, v_pages, block_table, lens, *,
+                                k_scales=None, v_scales=None,
                                 interpret=False):
     """q: (B,KV,group,hd); k_pages,v_pages: (P,ps,KV,hd);
     block_table: (B,NP) int32 (-1 = unmapped); lens: (B,) int32.
+    k_scales/v_scales: optional (P,ps,KV) f32 — int8 pool scales; when
+    given, pages are dequantized in-register (fused, no HBM round-trip).
     -> (B,KV,group,hd)."""
     B, KV, group, hd = q.shape
     P, ps = k_pages.shape[0], k_pages.shape[1]
     NP = block_table.shape[1]
     scale = 1.0 / math.sqrt(hd)
+    quantized = k_scales is not None
     kernel = functools.partial(_paged_decode_kernel, scale=scale, ps=ps,
-                               n_pages_grid=NP)
+                               n_pages_grid=NP, quantized=quantized)
     # unmapped entries are masked in-kernel; clamp so the index map always
     # names a resident page for the (dead) DMA
     bt_safe = jnp.clip(block_table, 0, P - 1).astype(jnp.int32)
@@ -92,18 +107,32 @@ def paged_decode_attention_bkgd(q, k_pages, v_pages, block_table, lens, *,
         del bt, lens
         return (bt_safe[b, p], 0, h, 0)
 
+    def scale_map(b, h, p, bt_safe, bt, lens):
+        # scale pools drop the trailing hd dim but ride the SAME
+        # scalar-prefetch block-table indirection as their values
+        del bt, lens
+        return (bt_safe[b, p], 0, h)
+
     def row_map(b, h, p, bt_safe, bt, lens):
         del bt_safe, bt, lens
         return (b, h, 0, 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, group, hd), row_map),
+        pl.BlockSpec((1, ps, 1, hd), page_map),
+        pl.BlockSpec((1, ps, 1, hd), page_map),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map),
+                     pl.BlockSpec((1, ps, 1), scale_map)]
+        operands += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, KV, NP),
-        in_specs=[
-            pl.BlockSpec((1, 1, group, hd), row_map),
-            pl.BlockSpec((1, ps, 1, hd), page_map),
-            pl.BlockSpec((1, ps, 1, hd), page_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, group, hd), row_map),
         scratch_shapes=[
             pltpu.VMEM((group,), jnp.float32),      # running max m
@@ -119,4 +148,4 @@ def paged_decode_attention_bkgd(q, k_pages, v_pages, block_table, lens, *,
         out_shape=jax.ShapeDtypeStruct((B, KV, group, hd), q.dtype),
         interpret=interpret,
     )(bt_safe, block_table.astype(jnp.int32), lens.astype(jnp.int32),
-      q, k_pages, v_pages)
+      *operands)

@@ -8,10 +8,13 @@ from repro.kernels.paged_attention.kernel import paged_decode_attention_bkgd
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_table, lens, *,
-                           interpret=False):
+                           k_scales=None, v_scales=None, interpret=False):
     """q: (B,H,hd) one query per row; k_pages,v_pages: (P,ps,KV,hd) shared
     page pool; block_table: (B,NP) int32 (-1 = unmapped); lens: (B,) int32
-    live tokens per row. Returns (B,H,hd).
+    live tokens per row. k_scales/v_scales: optional (P,ps,KV) f32 scale
+    pools for int8 pages (kv_dtype="int8") — dequantization happens
+    in-register inside the kernel, after the block-table gather. Returns
+    (B,H,hd).
 
     Layout is reshaped to the kernel's (B,KV,group,hd) GQA tiling; k/v
     stay in the pool layout — the block-table gather happens inside the
@@ -22,5 +25,6 @@ def paged_decode_attention(q, k_pages, v_pages, block_table, lens, *,
     group = H // KV
     qt = q.reshape(B, KV, group, hd)
     out = paged_decode_attention_bkgd(qt, k_pages, v_pages, block_table,
-                                      lens, interpret=interpret)
+                                      lens, k_scales=k_scales,
+                                      v_scales=v_scales, interpret=interpret)
     return out.reshape(B, H, hd)

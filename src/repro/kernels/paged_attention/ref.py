@@ -14,10 +14,14 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lens):
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lens,
+                               k_scales=None, v_scales=None):
     """q: (B,H,hd); k_pages,v_pages: (P,ps,KV,hd) shared page pool;
     block_table: (B,NP) int32 (-1 = unmapped); lens: (B,) int32 live
     tokens per row (row b attends to absolute positions < lens[b]).
+    k_scales/v_scales: optional (P,ps,KV) f32 int8-pool scales — the
+    oracle dequantizes the whole pool up front (``paging.dequantize_kv``
+    semantics), which the kernel must match while dequantizing lazily.
     Returns (B,H,hd).
 
     Position ``s`` of row ``b`` lives at pool page ``block_table[b, s //
@@ -31,6 +35,12 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_table, lens):
     P, ps, KV, _ = k_pages.shape
     NP = block_table.shape[1]
     group = H // KV
+
+    if k_scales is not None:
+        k_pages = k_pages.astype(jnp.float32) \
+            * k_scales.astype(jnp.float32)[..., None]
+        v_pages = v_pages.astype(jnp.float32) \
+            * v_scales.astype(jnp.float32)[..., None]
 
     bt_c = jnp.clip(block_table, 0, P - 1)
     k = k_pages[bt_c].reshape(B, NP * ps, KV, hd)           # (B,S,KV,hd)

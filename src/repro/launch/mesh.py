@@ -243,6 +243,16 @@ def cache_shardings(cache_abstract, mesh: Mesh, *, seq_len: int,
                 spec[3] = "model"
             out.append(NamedSharding(mesh, P(*spec)))
             continue
+        if nd == 4 and leafname in ("k_scale", "v_scale") and paged:
+            # int8-pool scales (L, P, ps, KV) mirror their value pool:
+            # pages -> data (dim 1, set above), kv-heads -> model — the
+            # kernel reads value and scale blocks through the same index
+            # map, so keeping the layouts aligned avoids a reshard
+            KV = leaf.shape[3]
+            if KV % tp == 0 and KV >= tp:
+                spec[3] = "model"
+            out.append(NamedSharding(mesh, P(*spec)))
+            continue
         if nd == 5 and leafname in ("k", "v"):
             S, KV = leaf.shape[2], leaf.shape[3]
             if KV % tp == 0 and KV >= tp:

@@ -70,6 +70,19 @@ def main(argv=None):
                          "KV writes in telemetry (default); 'raise' fails "
                          "the rollout instead of silently truncating "
                          "episode context")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["fp32", "bf16", "int8"],
+                    help="KV cache element type; int8 (paged layout only) "
+                         "stores quantized pages with per-entry scales "
+                         "and dequantizes inside the decode kernel")
+    ap.add_argument("--sampling", default="reference",
+                    choices=["reference", "fused"],
+                    help="fused = single Pallas pass that samples the "
+                         "next token and feeds the decode write step "
+                         "(compiled engine only)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off; ignored "
+                         "when greedy)")
     ap.add_argument("--pipeline", default="sync",
                     choices=["sync", "async"],
                     help="async = overlap Rollout(k+1) with Update(k) "
@@ -122,6 +135,7 @@ def main(argv=None):
         cache_layout=args.cache_layout, page_size=args.page_size,
         cache_pages=args.cache_pages, share_prefix=args.share_prefix,
         prefix_len=args.prefix_len, on_exhaust=args.on_exhaust,
+        kv_dtype=args.kv_dtype, sampling=args.sampling, top_p=args.top_p,
         pipeline=args.pipeline,
         max_policy_lag=args.max_policy_lag,
         # lag 0 experience is on-policy: arming the correction there

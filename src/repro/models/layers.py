@@ -14,12 +14,13 @@ target.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.models import paging
 from repro.models.param import pdef
 
 NEG_INF = -1e30
@@ -239,9 +240,53 @@ def self_attention(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
 
 
 class KVEntry(NamedTuple):
-    k: jax.Array      # (B, S_max, KV, hd)
+    k: jax.Array      # (B, S_max, KV, hd); paged: (P, ps, KV, hd)
     v: jax.Array
     # position of next write is tracked by the caller (shared across layers)
+    # quantized page pools (kv_dtype="int8") carry per-(page, offset,
+    # kv-head) f32 scales alongside the int8 values; None for full-
+    # precision pools and every dense cache (paging.quantize_kv).
+    k_scale: Any = None   # (P, ps, KV) f32, or None
+    v_scale: Any = None
+
+
+def _pool_is_quantized(kv: "KVEntry") -> bool:
+    return kv.k_scale is not None
+
+
+def _gather_pool(kv: "KVEntry", bt_c, B, n_tok, n_kv_heads, head_dim,
+                 out_dtype):
+    """Gather pool pages through a clamped block table into a dense
+    (B, n_tok, KV, hd) view, dequantizing int8 pools in the same step —
+    the shared read path of the XLA fallbacks (the semantic twin of the
+    in-kernel dequant in ``kernels/paged_attention``)."""
+    k = kv.k[bt_c].reshape(B, n_tok, n_kv_heads, head_dim)
+    v = kv.v[bt_c].reshape(B, n_tok, n_kv_heads, head_dim)
+    if _pool_is_quantized(kv):
+        ks = kv.k_scale[bt_c].reshape(B, n_tok, n_kv_heads)
+        vs = kv.v_scale[bt_c].reshape(B, n_tok, n_kv_heads)
+        k = paging.dequantize_kv(k, ks)
+        v = paging.dequantize_kv(v, vs)
+    return k.astype(out_dtype), v.astype(out_dtype)
+
+
+def _scatter_pool(kv: "KVEntry", pages, k, v, B, npp, ps, pad):
+    """Scatter new (B, S, KV, hd) K/V into pool pages ``pages`` (B, npp)
+    with ``mode="drop"`` sentinel semantics, quantizing on write for int8
+    pools — values and their per-entry scales land in the same scatter, so
+    a dropped write drops both."""
+    def put(pool, new):
+        widths = ((0, 0), (0, pad)) + ((0, 0),) * (new.ndim - 2)
+        buf = jnp.pad(new.astype(pool.dtype), widths)
+        buf = buf.reshape((B, npp, ps) + new.shape[2:])
+        return pool.at[pages].set(buf, mode="drop")
+
+    if _pool_is_quantized(kv):
+        qk, sk = paging.quantize_kv(k)
+        qv, sv = paging.quantize_kv(v)
+        return KVEntry(put(kv.k, qk), put(kv.v, qv),
+                       put(kv.k_scale, sk), put(kv.v_scale, sv))
+    return KVEntry(put(kv.k, k), put(kv.v, v))
 
 
 def init_kv(batch, s_max, n_kv_heads, head_dim, dtype=jnp.bfloat16):
@@ -357,14 +402,7 @@ def paged_prefill_attention(p, x, kv: KVEntry, block_table, *, n_heads,
     pad = npp * ps - S
     pages = block_table[:, :npp]
     pages = jnp.where(pages >= 0, pages, P)                 # OOB -> drop
-
-    def scatter(pool, new):
-        buf = jnp.pad(new.astype(pool.dtype),
-                      ((0, 0), (0, pad), (0, 0), (0, 0)))
-        buf = buf.reshape(B, npp, ps, new.shape[2], new.shape[3])
-        return pool.at[pages].set(buf, mode="drop")
-
-    new_kv = KVEntry(scatter(kv.k, k), scatter(kv.v, v))
+    new_kv = _scatter_pool(kv, pages, k, v, B, npp, ps, pad)
     mask = causal_mask(S, S)
     if attn_impl in ("pallas", "paged"):
         from repro.kernels.flash_attention import ops as fa_ops
@@ -401,27 +439,20 @@ def paged_chunk_attention(p, x, kv: KVEntry, block_table, start, *, n_heads,
     pad = npp * ps - S
     pages = block_table[:, j0:j0 + npp]
     pages = jnp.where(pages >= 0, pages, P)                 # OOB -> drop
-
-    def scatter(pool, new):
-        buf = jnp.pad(new.astype(pool.dtype),
-                      ((0, 0), (0, pad), (0, 0), (0, 0)))
-        buf = buf.reshape(B, npp, ps, new.shape[2], new.shape[3])
-        return pool.at[pages].set(buf, mode="drop")
-
-    new_kv = KVEntry(scatter(kv.k, k), scatter(kv.v, v))
+    new_kv = _scatter_pool(kv, pages, k, v, B, npp, ps, pad)
     # gather the full context [0, start+S) back through the block table
     # (prefix pages included) — the xla oracle layout, as in the paged
     # decode fallback; masked positions never contribute
     ctx_np = j0 + npp
     bt = block_table[:, :ctx_np]
     bt_c = jnp.clip(bt, 0, P - 1)
-    kc = new_kv.k[bt_c].reshape(B, ctx_np * ps, n_kv_heads, head_dim)
-    vc = new_kv.v[bt_c].reshape(B, ctx_np * ps, n_kv_heads, head_dim)
+    kc, vc = _gather_pool(new_kv, bt_c, B, ctx_np * ps, n_kv_heads,
+                          head_dim, q.dtype)
     s_idx = jnp.arange(ctx_np * ps)[None, None, :]          # (1,1,Sk)
     valid = ((s_idx <= positions[:, :, None])               # causal
              & jnp.repeat(bt >= 0, ps, axis=1)[:, None, :])
     mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None]
-    out = _sdpa(q, kc.astype(q.dtype), vc.astype(q.dtype), mask)
+    out = _sdpa(q, kc, vc, mask)
     out = out.reshape(B, S, n_heads * head_dim)
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_kv
 
@@ -461,28 +492,57 @@ def paged_decode_attention(p, x, kv: KVEntry, block_table, pos, *, wpage,
     q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
     q = apply_rope(q, positions, rope_theta)
     k_new = apply_rope(k_new, positions, rope_theta)
+    quant = _pool_is_quantized(kv)
     if cow_src is not None:
         # privatize shared pages first (CoW): the copied content below
         # the row's fill line must be in place before scrub/write. CoW
         # dst pages and exhaustion-recovery scrub pages are disjoint (a
-        # freshly allocated page has refcount 1 — never CoW'd).
+        # freshly allocated page has refcount 1 — never CoW'd). Scales
+        # travel with their values — a privatized page reads bitwise as
+        # the shared original until the row's own write lands.
         src_c = jnp.clip(cow_src, 0, P - 1)
-        kv = KVEntry(kv.k.at[cow_dst].set(kv.k[src_c], mode="drop"),
-                     kv.v.at[cow_dst].set(kv.v[src_c], mode="drop"))
+        kv = kv._replace(
+            k=kv.k.at[cow_dst].set(kv.k[src_c], mode="drop"),
+            v=kv.v.at[cow_dst].set(kv.v[src_c], mode="drop"))
+        if quant:
+            kv = kv._replace(
+                k_scale=kv.k_scale.at[cow_dst].set(kv.k_scale[src_c],
+                                                   mode="drop"),
+                v_scale=kv.v_scale.at[cow_dst].set(kv.v_scale[src_c],
+                                                   mode="drop"))
     if scrub is not None:
         zero = jnp.zeros((), kv.k.dtype)
-        kv = KVEntry(kv.k.at[scrub].set(zero, mode="drop"),
-                     kv.v.at[scrub].set(zero, mode="drop"))
-    kv = KVEntry(
-        kv.k.at[wpage, woff].set(k_new[:, 0].astype(kv.k.dtype),
-                                 mode="drop"),
-        kv.v.at[wpage, woff].set(v_new[:, 0].astype(kv.v.dtype),
-                                 mode="drop"))
+        kv = kv._replace(k=kv.k.at[scrub].set(zero, mode="drop"),
+                         v=kv.v.at[scrub].set(zero, mode="drop"))
+        if quant:
+            # zero scale -> dequant 0 exactly: a scrubbed page reads as
+            # zeros no matter what int8 residue the values slots held
+            zf = jnp.zeros((), jnp.float32)
+            kv = kv._replace(k_scale=kv.k_scale.at[scrub].set(zf,
+                                                              mode="drop"),
+                             v_scale=kv.v_scale.at[scrub].set(zf,
+                                                              mode="drop"))
+    if quant:
+        qk, sk = paging.quantize_kv(k_new[:, 0])    # (B,KV,hd) i8 + (B,KV)
+        qv, sv = paging.quantize_kv(v_new[:, 0])
+        kv = KVEntry(
+            kv.k.at[wpage, woff].set(qk, mode="drop"),
+            kv.v.at[wpage, woff].set(qv, mode="drop"),
+            kv.k_scale.at[wpage, woff].set(sk, mode="drop"),
+            kv.v_scale.at[wpage, woff].set(sv, mode="drop"))
+    else:
+        kv = KVEntry(
+            kv.k.at[wpage, woff].set(k_new[:, 0].astype(kv.k.dtype),
+                                     mode="drop"),
+            kv.v.at[wpage, woff].set(v_new[:, 0].astype(kv.v.dtype),
+                                     mode="drop"))
     lens = pos + 1                         # current token included
     if attn_impl in ("paged", "pallas"):
         from repro.kernels.paged_attention import ops as pa_ops
         out = pa_ops.paged_decode_attention(q[:, 0], kv.k, kv.v,
                                             block_table, lens,
+                                            k_scales=kv.k_scale,
+                                            v_scales=kv.v_scale,
                                             interpret=True)
         out = out[:, None]
     else:
@@ -492,14 +552,14 @@ def paged_decode_attention(p, x, kv: KVEntry, block_table, pos, *, wpage,
         # match the DENSE decode path's mixed-precision numerics (bf16
         # matmuls) bitwise, or dense-vs-paged engine trajectories drift
         bt_c = jnp.clip(block_table, 0, P - 1)
-        k = kv.k[bt_c].reshape(B, NP * ps, n_kv_heads, head_dim)
-        v = kv.v[bt_c].reshape(B, NP * ps, n_kv_heads, head_dim)
+        k, v = _gather_pool(kv, bt_c, B, NP * ps, n_kv_heads, head_dim,
+                            q.dtype)
         s_idx = jnp.arange(NP * ps)[None, :]
         valid = ((s_idx < lens[:, None])
                  & jnp.repeat(block_table >= 0, ps, axis=1))
         mask = jnp.where(valid, 0.0,
                          NEG_INF).astype(jnp.float32)[:, None, None, :]
-        out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), mask)
+        out = _sdpa(q, k, v, mask)
     out = out.reshape(B, 1, n_heads * head_dim)
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), kv
 

@@ -180,3 +180,47 @@ def pages_in_use(refcount) -> jax.Array:
     A page forked across many rows counts ONCE — that difference vs the
     per-slot sum is exactly the prefix-sharing memory win."""
     return jnp.sum((jnp.asarray(refcount) > 0).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Quantized page format (kv_dtype="int8")
+# ---------------------------------------------------------------------------
+#
+# An int8 pool stores each K/V vector as 8-bit values plus ONE f32 scale
+# per (page, in-page offset, kv head) — i.e. scales ride alongside the
+# page pool as a ``(..., n_pages, page_size, KV)`` tensor factored by
+# page exactly like the values, so every page operation (alloc, release,
+# fork, CoW copy, scrub) treats them as a second pool with the same
+# refcount lifecycle. Per-entry (not per-page) scales keep writes
+# independent: appending a token never re-quantizes its page, so the
+# incremental decode write path stays a pure scatter. Bytes per token per
+# kv head: hd + 4 vs 2*hd (bf16) / 4*hd (fp32) — the "equal memory,
+# double the context" lever.
+
+INT8_QMAX = 127.0
+
+
+def quantize_kv(x):
+    """Symmetric per-vector int8 quantization over the last axis.
+
+    x: (..., hd) float — one K or V head-vector per leading index.
+    Returns ``(q, scale)``: ``q`` (..., hd) int8, ``scale`` (...) f32 with
+    ``dequantize_kv(q, scale) ≈ x`` (max abs error ``scale/2``). An
+    all-zero vector quantizes exactly (scale 0 -> q 0 -> dequant 0).
+    """
+    xf = jnp.asarray(x).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = absmax / INT8_QMAX                              # 0 for zero rows
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[..., None]),
+                 -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of ``quantize_kv``: (..., hd) int8 + (...) f32 -> f32.
+    The single dequant formula every reader shares — the Pallas kernel
+    applies exactly this (in-register) so the fused path is bitwise the
+    materialized one."""
+    return jnp.asarray(q).astype(jnp.float32) \
+        * jnp.asarray(scale).astype(jnp.float32)[..., None]

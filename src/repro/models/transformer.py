@@ -108,9 +108,23 @@ class PagedDecodeCache(NamedTuple):
         return self.kv.k.shape[1]
 
 
+KV_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+
+
 def init_cache(cfg: ModelConfig, batch: int, s_max: int,
                dtype=jnp.bfloat16, *, layout: str = "dense",
-               page_size: int = 16, n_pages: Optional[int] = None):
+               page_size: int = 16, n_pages: Optional[int] = None,
+               kv_dtype: Optional[str] = None):
+    """``kv_dtype`` ("fp32" | "bf16" | "int8") overrides ``dtype`` by
+    name; "int8" (paged layout only) stores page values as int8 with
+    per-(page, offset, kv-head) f32 scale pools riding alongside
+    (``paging.quantize_kv``) — halving bytes-per-token vs bf16."""
+    if kv_dtype is not None:
+        assert kv_dtype in KV_DTYPES, kv_dtype
+        assert kv_dtype != "int8" or layout == "paged", (
+            "kv_dtype='int8' requires the paged layout — scales are a "
+            "second page pool sharing the block-table/refcount lifecycle")
+        dtype = KV_DTYPES[kv_dtype]
     if layout == "paged":
         assert cfg.sliding_window == 0, (
             "paged cache does not support sliding-window archs (the ring "
@@ -120,8 +134,13 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int,
             n_pages = batch * nps
         shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
                  cfg.head_dim_)
+        kv = L.KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+        if dtype == jnp.int8:
+            kv = L.KVEntry(kv.k, kv.v,
+                           jnp.zeros(shape[:-1], jnp.float32),
+                           jnp.zeros(shape[:-1], jnp.float32))
         return PagedDecodeCache(
-            kv=L.KVEntry(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)),
+            kv=kv,
             block_table=jnp.full((batch, nps), paging.PAGE_UNMAPPED,
                                  jnp.int32),
             refcount=jnp.zeros((n_pages,), jnp.int32),

@@ -124,18 +124,25 @@ def token_lp(logits, tokens):
     return token_logprobs(lg[:, None, :], jnp.asarray(tokens)[:, None])[:, 0]
 
 
-def sample_tokens(rng, logits, temperature: float):
+def sample_tokens(rng, logits, temperature: float, top_p: float = 1.0):
     """Sample next tokens from (B, V) logits. Returns (tokens, logprobs).
 
     ``temperature <= 0`` means greedy argmax with log-probs taken from the
-    untempered distribution (rng unused) — the deterministic mode both
-    engines share for trajectory-parity testing.
+    untempered distribution (rng unused, ``top_p`` ignored) — the
+    deterministic mode both engines share for trajectory-parity testing.
+    ``top_p < 1`` applies a nucleus filter after tempering (the shared
+    ``kernels.fused_sample`` mask, so reference and fused sampling filter
+    identically); log-probs come from the filtered, renormalized
+    distribution.
     """
     lg = jnp.asarray(logits).astype(jnp.float32)
     if temperature <= 0.0:
         tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
     else:
         lg = lg / temperature
+        if top_p < 1.0:
+            from repro.kernels.fused_sample.ops import apply_top_p
+            lg = apply_top_p(lg, top_p)
         tok = jax.random.categorical(rng, lg, axis=-1).astype(jnp.int32)
     return tok, token_lp(lg, tok)
 

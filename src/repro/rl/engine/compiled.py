@@ -117,10 +117,12 @@ class CompiledRolloutEngine:
 
     def __init__(self, model, env, *, max_turns: int = 4,
                  max_turn_tokens: int = 8, max_context: int = 256,
-                 temperature: float = 1.0,
+                 temperature: float = 1.0, top_p: float = 1.0,
+                 sampling: str = "reference",
                  mesh_config=None, attn_impl: str = "xla",
                  cache_layout: str = "dense", page_size: int = 16,
                  cache_pages: Optional[int] = None,
+                 kv_dtype: str = "bf16",
                  share_prefix: bool = False,
                  prefix_len: Optional[int] = None,
                  on_exhaust: str = "count"):
@@ -144,16 +146,32 @@ class CompiledRolloutEngine:
                 "share_prefix requires cache_layout='paged' (sharing works "
                 "by forking pool pages across slots' block tables; dense "
                 "rows have nothing to fork)")
+        if kv_dtype not in ("fp32", "bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'fp32', 'bf16' or 'int8', "
+                             f"got {kv_dtype!r}")
+        if kv_dtype == "int8" and cache_layout != "paged":
+            raise ValueError(
+                "kv_dtype='int8' requires cache_layout='paged' — the "
+                "quantization scales are a second page pool sharing the "
+                "block-table/refcount lifecycle")
+        if sampling not in ("reference", "fused"):
+            raise ValueError(f"sampling must be 'reference' or 'fused', "
+                             f"got {sampling!r}")
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {top_p}")
         self.model = model
         self.env = env
         self.max_turns = max_turns
         self.max_turn_tokens = max_turn_tokens
         self.max_context = max_context
         self.temperature = temperature
+        self.top_p = top_p
+        self.sampling = sampling
         self.attn_impl = attn_impl
         self.cache_layout = cache_layout
         self.page_size = page_size
         self.cache_pages = cache_pages      # None = full provisioning
+        self.kv_dtype = kv_dtype
         self.on_exhaust = on_exhaust
         self.share_prefix = share_prefix
         # the shared run covers FULL pages of the episode-initial
@@ -194,7 +212,8 @@ class CompiledRolloutEngine:
         T, olen = self.max_context, self.env.obs_len
         n_actions = env.n_actions
         mtt, mturns = self.max_turn_tokens, self.max_turns
-        temperature = self.temperature
+        temperature, top_p = self.temperature, self.top_p
+        fused_sampling = self.sampling == "fused"
         attn_impl = self.attn_impl
         paged = self.cache_layout == "paged"
         page_size = self.page_size
@@ -263,6 +282,20 @@ class CompiledRolloutEngine:
             return (logits, cache, ref_logits, ref_cache, tokens,
                     ref_lp_buf, pos)
 
+        def sample_and_write(decode, logits, cache, krng, write):
+            """The fused sample-and-write step (``sampling="fused"``):
+            ONE packaged op takes the final-layer logits, samples via the
+            one-pass Pallas sampler (temperature / top-p / greedy), and
+            immediately appends the sampled token's K/V into its page —
+            the token feeds the decode write directly instead of
+            round-tripping through the scan carry between two ops."""
+            from repro.kernels.fused_sample import ops as fs_ops
+            tok, lp = fs_ops.fused_sample_tokens(
+                krng, logits, temperature, top_p=top_p, interpret=True)
+            (new_logits, new_cache), _ = decode((logits, cache),
+                                                (tok, write))
+            return tok, lp, new_logits, new_cache
+
         def gen_turn(decode, ref_decode, logits, cache, ref_logits,
                      ref_cache, tokens, gen_mask, logprobs, ref_lp_buf,
                      pos, active, krngs):
@@ -273,7 +306,15 @@ class CompiledRolloutEngine:
                  logprobs, ref_lp_buf, pos, acted, actions, last_tok,
                  tl) = carry
                 write = ~acted
-                tok, lp = common.sample_tokens(krng, logits, temperature)
+                if fused_sampling:
+                    # sample + KV append as one fused step; the buffer
+                    # bookkeeping below depends only on (tok, lp), so
+                    # the decode no longer waits behind it in dataflow
+                    tok, lp, new_logits, cache = sample_and_write(
+                        decode, logits, cache, krng, write)
+                else:
+                    tok, lp = common.sample_tokens(krng, logits,
+                                                   temperature, top_p)
                 cidx = jnp.where(write, pos, T)          # OOB write -> drop
                 tokens = tokens.at[rows, cidx].set(tok, mode="drop")
                 gen_mask = gen_mask.at[rows, cidx].set(True, mode="drop")
@@ -290,7 +331,11 @@ class CompiledRolloutEngine:
                 newly = write & common.action_mask(tok, n_actions)
                 actions = jnp.where(newly, tok - ACTION_BASE, actions)
                 acted = acted | newly
-                (logits, cache), _ = decode((logits, cache), (tok, write))
+                if fused_sampling:
+                    logits = new_logits
+                else:
+                    (logits, cache), _ = decode((logits, cache),
+                                                (tok, write))
                 return (logits, cache, ref_logits, ref_cache, tokens,
                         gen_mask, logprobs, ref_lp_buf, pos, acted,
                         actions, last_tok, tl), None
@@ -663,9 +708,15 @@ class CompiledRolloutEngine:
                     B, T, self.shared_len, self.page_size)
             cache = model.init_cache(B, T, layout="paged",
                                      page_size=self.page_size,
-                                     n_pages=n_pages)
+                                     n_pages=n_pages,
+                                     kv_dtype=self.kv_dtype)
         else:
-            cache = model.init_cache(B, T)
+            # default "bf16" keeps the family-generic call (SSM/hybrid
+            # caches have no kv_dtype knob); anything else is opt-in and
+            # signature-checked by the registry
+            kw = ({} if self.kv_dtype == "bf16"
+                  else {"kv_dtype": self.kv_dtype})
+            cache = model.init_cache(B, T, **kw)
         return slots.SlotCarry(
             cache=cache,
             logits=jnp.zeros((B, model.cfg.vocab_size), jnp.float32),

@@ -39,6 +39,7 @@ class RolloutEngine:
     max_turn_tokens: int = 8
     max_context: int = 256
     temperature: float = 1.0
+    top_p: float = 1.0              # nucleus filter (1.0 = off)
 
     def __post_init__(self):
         cfg = self.model.cfg
@@ -125,7 +126,8 @@ class RolloutEngine:
                 if not write.any():
                     break
                 sampled, lp = common.sample_tokens(
-                    common.sample_rng(trng, t), logits_buf, self.temperature)
+                    common.sample_rng(trng, t), logits_buf,
+                    self.temperature, self.top_p)
                 sampled_np = np.asarray(sampled, np.int32)
                 lp_np = np.asarray(lp, np.float32)
 

@@ -284,6 +284,151 @@ def test_paged_cache_exhaustion_recovery_scrubs_recycled_pages(rng):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 
 
+# ---------------------------------------------------------------------------
+# Int8-quantized pages: dequantization fused inside the paged decode kernel
+# ---------------------------------------------------------------------------
+
+def _int8_paged_case(rng, B, NP, P, ps, H, KV, hd, *, lens=None):
+    """A `_paged_case` whose pools are int8-quantized with per-entry
+    scales (the paged pool's kv_dtype="int8" storage format)."""
+    from repro.models import paging
+    q, kp, vp, bt, lens = _paged_case(rng, B, NP, P, ps, H, KV, hd,
+                                      jnp.float32, lens=lens)
+    qk, sk = paging.quantize_kv(kp)
+    qv, sv = paging.quantize_kv(vp)
+    return q, qk, qv, sk, sv, bt, lens
+
+
+@pytest.mark.parametrize("B,NP,P,ps,H,KV,hd", [
+    (2, 4, 16, 8, 4, 2, 64),
+    (3, 8, 32, 16, 8, 8, 32),
+    (2, 4, 8, 8, 14, 2, 64),     # qwen2's non-pow2 head count, exact pool
+    (1, 2, 64, 128, 2, 1, 128),  # MQA, big pages, mostly-unmapped pool
+])
+def test_paged_decode_attention_int8_matches_ref(B, NP, P, ps, H, KV, hd,
+                                                 rng):
+    """In-kernel dequant vs the pure-jnp oracle that materializes the
+    dequantized pool up front — ragged lens, non-contiguous block table."""
+    q, qk, qv, sk, sv, bt, lens = _int8_paged_case(rng, B, NP, P, ps, H,
+                                                   KV, hd)
+    out = paged_decode_attention(q, qk, qv, bt, lens, k_scales=sk,
+                                 v_scales=sv, interpret=True)
+    expect = paged_decode_attention_ref(q, qk, qv, bt, lens, k_scales=sk,
+                                        v_scales=sv)
+    assert out.shape == expect.shape and out.dtype == expect.dtype
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               **TOLS[jnp.float32])
+
+
+def test_paged_decode_attention_int8_partial_last_page(rng):
+    """Pin the ragged boundary for quantized pages: one full-page row,
+    one row one token into a fresh page, one a token short of a page."""
+    B, NP, P, ps, H, KV, hd = 3, 4, 16, 8, 4, 2, 32
+    lens = [ps * 2, ps + 1, ps - 1]
+    q, qk, qv, sk, sv, bt, lens = _int8_paged_case(rng, B, NP, P, ps, H,
+                                                   KV, hd, lens=lens)
+    out = paged_decode_attention(q, qk, qv, bt, lens, k_scales=sk,
+                                 v_scales=sv, interpret=True)
+    expect = paged_decode_attention_ref(q, qk, qv, bt, lens, k_scales=sk,
+                                        v_scales=sv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               **TOLS[jnp.float32])
+
+
+def test_paged_decode_attention_int8_bitwise_vs_dequantized_pool(rng):
+    """The fusion contract: in-kernel dequant is BITWISE identical to
+    running the same kernel on pools materialized through
+    ``paging.dequantize_kv`` — the fusion only moves where the multiply
+    happens, never what is computed."""
+    from repro.models import paging
+    B, NP, P, ps, H, KV, hd = 2, 4, 16, 8, 4, 2, 64
+    q, qk, qv, sk, sv, bt, lens = _int8_paged_case(rng, B, NP, P, ps, H,
+                                                   KV, hd)
+    fused = paged_decode_attention(q, qk, qv, bt, lens, k_scales=sk,
+                                   v_scales=sv, interpret=True)
+    materialized = paged_decode_attention(
+        q, paging.dequantize_kv(qk, sk), paging.dequantize_kv(qv, sv),
+        bt, lens, interpret=True)
+    np.testing.assert_array_equal(np.asarray(fused),
+                                  np.asarray(materialized))
+
+
+def test_paged_decode_attention_int8_fully_masked_rows_are_finite(rng):
+    B, NP, P, ps, H, KV, hd = 2, 2, 8, 8, 4, 2, 32
+    q, qk, qv, sk, sv, bt, _ = _int8_paged_case(rng, B, NP, P, ps, H, KV,
+                                                hd)
+    lens = jnp.zeros((B,), jnp.int32)
+    out = paged_decode_attention(q, qk, qv, bt, lens, k_scales=sk,
+                                 v_scales=sv, interpret=True)
+    assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# Fused sample kernel (one streaming pass: token + logprob)
+# ---------------------------------------------------------------------------
+
+def test_fused_sample_kernel_matches_ref_exactly(rng):
+    """One-pass Gumbel-argmax + online logsumexp vs the two-read oracle:
+    tokens exact, logprobs to fp accumulation order."""
+    from repro.kernels.fused_sample import fused_sample_ref
+    from repro.kernels.fused_sample.kernel import fused_sample_bkgd
+    B, V = 4, 2500                           # V % block_v != 0 (pad path)
+    lg = jax.random.normal(rng, (B, V), jnp.float32) * 3.0
+    noise = jax.random.gumbel(jax.random.fold_in(rng, 1), (B, V),
+                              jnp.float32)
+    tok, lp = fused_sample_bkgd(lg, noise, block_v=1024, interpret=True)
+    tok_r, lp_r = fused_sample_ref(lg, noise)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_r))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_sample_greedy_matches_reference_sampler(rng):
+    """temperature <= 0: greedy argmax with untempered logprobs — same
+    contract as ``common.sample_tokens``, token-exact."""
+    from repro.kernels.fused_sample import fused_sample_tokens
+    from repro.rl.engine import common
+    lg = jax.random.normal(rng, (5, 977), jnp.float32) * 2.0
+    tok, lp = fused_sample_tokens(rng, lg, 0.0, interpret=True)
+    tok_r, lp_r = common.sample_tokens(rng, lg, 0.0)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_r))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_fused_sample_temperature_matches_categorical(rng):
+    """Temperature sampling reuses the Gumbel noise jax.random.categorical
+    derives from the key, so fused and reference sampling pick the SAME
+    token on the same rng stream."""
+    from repro.kernels.fused_sample import fused_sample_tokens
+    from repro.rl.engine import common
+    lg = jax.random.normal(rng, (6, 512), jnp.float32) * 2.0
+    for i in range(4):
+        key = jax.random.fold_in(rng, i)
+        tok, lp = fused_sample_tokens(key, lg, 0.7, interpret=True)
+        tok_r, lp_r = common.sample_tokens(key, lg, 0.7)
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_r))
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lp_r),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_fused_sample_top_p_filters_to_nucleus(rng):
+    """With top-p active, sampled tokens always come from the nucleus
+    (the smallest top-probability set reaching the mass); a tiny top_p
+    degenerates to greedy (top-1 always survives the filter)."""
+    from repro.kernels.fused_sample import apply_top_p, fused_sample_tokens
+    lg = jax.random.normal(rng, (4, 257), jnp.float32) * 4.0
+    nucleus = np.asarray(apply_top_p(lg / 0.8, 0.6)) > -1e29
+    for i in range(8):
+        key = jax.random.fold_in(rng, i)
+        tok, _ = fused_sample_tokens(key, lg, 0.8, top_p=0.6,
+                                     interpret=True)
+        assert all(nucleus[b, t] for b, t in enumerate(np.asarray(tok)))
+    tok, _ = fused_sample_tokens(rng, lg, 0.8, top_p=1e-6, interpret=True)
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.argmax(np.asarray(lg), axis=-1))
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,s,h,g,p,n,chunk", [
     (2, 256, 4, 1, 32, 16, 64),

@@ -1,0 +1,399 @@
+"""Int8-quantized KV pages (PR 7): quantize/dequantize round-trip
+bounds, scale lifecycle under copy-on-write and prefix forking, engine
+greedy parity across kv_dtypes, fused sample-and-write parity, and the
+one-time ref-fallback warning.
+
+The storage contract under test: an int8 pool stores one symmetric
+per-(page, offset, kv-head) f32 scale next to each quantized K/V vector
+(``models/paging.py``), every reader dequantizes through the single
+``paging.dequantize_kv`` formula (the Pallas kernel applies it
+in-register), and scales travel with their values through CoW copies,
+prefix forks and exhaustion-recovery scrubs.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import paging
+from repro.rl.engine import CompiledRolloutEngine
+from repro.rl.envs import make_env
+
+ENGINE_KW = dict(max_turns=3, max_turn_tokens=4, max_context=96,
+                 temperature=0.0)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs.base import get_smoke_config
+    from repro.models.registry import build_model
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# Round-trip properties of quantize_kv / dequantize_kv
+# ---------------------------------------------------------------------------
+
+def _check_roundtrip(x):
+    """Invariants of the symmetric per-vector scheme, for any input:
+    error bounded by scale/2 per element, scale = absmax/127, int8 range
+    fully used but never exceeded."""
+    q, s = paging.quantize_kv(x)
+    xf = np.asarray(x, np.float32)
+    qn, sn = np.asarray(q), np.asarray(s, np.float32)
+    assert qn.dtype == np.int8 and sn.shape == xf.shape[:-1]
+    np.testing.assert_allclose(sn, np.abs(xf).max(-1) / paging.INT8_QMAX,
+                               rtol=1e-6)
+    d = np.asarray(paging.dequantize_kv(q, s), np.float32)
+    bound = sn[..., None] / 2 + 1e-7 + 1e-6 * np.abs(xf)
+    assert (np.abs(d - xf) <= bound).all(), np.abs(d - xf).max()
+    assert (np.abs(qn) <= paging.INT8_QMAX).all()
+
+
+def test_quantize_roundtrip_error_bound_fixed_seeds():
+    for seed in range(8):                    # always runs (no hypothesis)
+        key = jax.random.PRNGKey(seed)
+        shape = [(4, 8, 2, 16), (3, 64), (1, 1, 4)][seed % 3]
+        scale = [1.0, 1e-3, 40.0][seed % 3]
+        _check_roundtrip(jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def test_quantize_roundtrip_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16 - 1),
+           hd=st.integers(1, 64),
+           logmag=st.floats(-6.0, 6.0))
+    def run(seed, hd, logmag):
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (5, hd), jnp.float32) * (10.0 ** logmag)
+        _check_roundtrip(x)
+
+    run()
+
+
+def test_quantize_zero_vectors_exact():
+    """All-zero vectors round-trip EXACTLY (scale 0 -> q 0 -> dequant 0):
+    the property the exhaustion-recovery scrub relies on when it zeroes a
+    recycled page's scales."""
+    q, s = paging.quantize_kv(jnp.zeros((3, 4, 16), jnp.float32))
+    assert (np.asarray(q) == 0).all() and (np.asarray(s) == 0).all()
+    d = paging.dequantize_kv(q, s)
+    np.testing.assert_array_equal(np.asarray(d), 0.0)
+    # mixed: zero rows exact even next to large rows
+    x = jnp.stack([jnp.zeros((8,)), jnp.full((8,), 100.0)])
+    q, s = paging.quantize_kv(x)
+    d = np.asarray(paging.dequantize_kv(q, s))
+    np.testing.assert_array_equal(d[0], 0.0)
+    np.testing.assert_allclose(d[1], 100.0, rtol=1e-6)
+
+
+def test_bf16_roundtrip_values_survive():
+    """bf16 inputs (the decode write path's compute dtype) stay inside
+    the same bound after the f32 upcast inside quantize_kv."""
+    x = (jax.random.normal(jax.random.PRNGKey(3), (4, 2, 32), jnp.float32)
+         .astype(jnp.bfloat16))
+    _check_roundtrip(x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Cache allocation / validation
+# ---------------------------------------------------------------------------
+
+def test_int8_cache_allocates_scale_pools(model_and_params):
+    model, _ = model_and_params
+    cache = model.init_cache(2, 32, layout="paged", page_size=8,
+                             kv_dtype="int8")
+    kv = cache.kv
+    assert kv.k.dtype == jnp.int8 and kv.v.dtype == jnp.int8
+    assert kv.k_scale.dtype == jnp.float32
+    assert kv.k_scale.shape == kv.k.shape[:-1]       # (L, P, ps, KV)
+    assert kv.v_scale.shape == kv.v.shape[:-1]
+    # bf16 / fp32 pools carry NO scale tensors (empty pytree subtree)
+    for dt in ("bf16", "fp32"):
+        c = model.init_cache(2, 32, layout="paged", page_size=8,
+                             kv_dtype=dt)
+        assert c.kv.k_scale is None and c.kv.v_scale is None
+
+
+def test_int8_requires_paged_layout(model_and_params):
+    model, _ = model_and_params
+    with pytest.raises(AssertionError):
+        model.init_cache(2, 32, kv_dtype="int8")     # dense layout
+    with pytest.raises(AssertionError):
+        model.init_cache(2, 32, layout="paged", page_size=8,
+                         kv_dtype="int4")            # unknown name
+
+
+# ---------------------------------------------------------------------------
+# Scale lifecycle: prefill writes, CoW copies, prefix forks
+# ---------------------------------------------------------------------------
+
+def test_int8_prefill_pages_dequantize_to_dense_cache(model_and_params,
+                                                      rng):
+    """Prefill through the int8 paged layout: every written (page, off)
+    entry dequantizes back to the dense cache's K within its own
+    scale/2 bound — scales land in the right pool slots, including the
+    partially filled last page."""
+    model, params = model_and_params
+    B, S, CAP, ps = 2, 21, 32, 8             # 21 = 2 full pages + 5
+    toks = jax.random.randint(rng, (B, CAP), 0, model.cfg.vocab_size)
+    _, dcache = model.prefill(params, toks[:, :S], model.init_cache(B, CAP))
+    _, qcache = model.prefill(
+        params, toks[:, :S],
+        model.init_cache(B, CAP, layout="paged", page_size=ps,
+                         kv_dtype="int8"))
+    bt = np.asarray(qcache.block_table)
+    kd = np.asarray(dcache.kv.k, np.float32)          # (L, B, CAP, KV, hd)
+    deq = np.asarray(paging.dequantize_kv(qcache.kv.k, qcache.kv.k_scale),
+                     np.float32)                      # (L, P, ps, KV, hd)
+    sk = np.asarray(qcache.kv.k_scale, np.float32)    # (L, P, ps, KV)
+    for b in range(B):
+        for s in range(S):
+            page, off = bt[b, s // ps], s % ps
+            assert page >= 0
+            err = np.abs(deq[:, page, off] - kd[:, b, s])
+            assert (err <= sk[:, page, off][..., None] / 2 + 1e-6).all()
+
+
+def test_cow_write_equals_precopied_write(rng):
+    """Layer-level CoW equivalence on a quantized pool: decoding with a
+    (cow_src, cow_dst) privatization is BITWISE the same as manually
+    copying the page (values AND scales) up front — the scale copy in
+    ``layers.paged_decode_attention`` travels with its values."""
+    from repro.models import layers as L
+    H = KV = 2
+    hd, D, P, ps, B, NP = 8, 16, 6, 4, 2, 2
+    keys = jax.random.split(rng, 8)
+    p = {"wq": jax.random.normal(keys[0], (D, H * hd)) * 0.1,
+         "wk": jax.random.normal(keys[1], (D, KV * hd)) * 0.1,
+         "wv": jax.random.normal(keys[2], (D, KV * hd)) * 0.1,
+         "wo": jax.random.normal(keys[3], (H * hd, D)) * 0.1}
+    x = jax.random.normal(keys[4], (B, 1, D))
+    qk, sk = paging.quantize_kv(jax.random.normal(keys[5], (P, ps, KV, hd)))
+    qv, sv = paging.quantize_kv(jax.random.normal(keys[6], (P, ps, KV, hd)))
+    kv = L.KVEntry(qk, qv, sk, sv)
+    # row 0 writes into a privatized copy of shared page 1 -> fresh page 4
+    bt_cow = jnp.array([[1, -1], [2, -1]], jnp.int32).at[0, 0].set(4)
+    pos = jnp.array([2, 1], jnp.int32)
+    sent = jnp.array([4, P], jnp.int32)      # row 1: sentinel (no CoW)
+    wpage = jnp.array([4, 2], jnp.int32)
+    woff = jnp.array([2, 1], jnp.int32)
+    out_cow, kv_cow = L.paged_decode_attention(
+        p, x, kv, bt_cow, pos, wpage=wpage, woff=woff,
+        cow_src=jnp.array([1, P], jnp.int32), cow_dst=sent,
+        n_heads=H, n_kv_heads=KV, head_dim=hd, rope_theta=1e4)
+    # oracle: pre-copy page 1 -> 4 (values + scales) by hand, no CoW args
+    kv_pre = L.KVEntry(kv.k.at[4].set(kv.k[1]), kv.v.at[4].set(kv.v[1]),
+                       kv.k_scale.at[4].set(kv.k_scale[1]),
+                       kv.v_scale.at[4].set(kv.v_scale[1]))
+    out_pre, kv_exp = L.paged_decode_attention(
+        p, x, kv_pre, bt_cow, pos, wpage=wpage, woff=woff,
+        n_heads=H, n_kv_heads=KV, head_dim=hd, rope_theta=1e4)
+    np.testing.assert_array_equal(np.asarray(out_cow), np.asarray(out_pre))
+    for got, exp in zip(kv_cow, kv_exp):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    # the privatized page still reads as the shared original off the
+    # write offset: scales below the fill line are bitwise the source's
+    np.testing.assert_array_equal(np.asarray(kv_cow.k_scale[4][:2]),
+                                  np.asarray(kv.k_scale[1][:2]))
+
+
+def test_fork_shares_quantized_pages_bitwise(model_and_params, rng):
+    """Prefix fork on an int8 pool: a slot whose block table aliases the
+    owner's pages decodes BITWISE like the owner — forked rows read the
+    same quantized values through the same scales (no copy happened)."""
+    from repro.rl.engine import paging as epaging
+    model, params = model_and_params
+    B, S, CAP, ps = 2, 8, 24, 4
+    row = jax.random.randint(rng, (1, S), 0, model.cfg.vocab_size)
+    toks = jnp.tile(row, (B, 1))
+    cache = model.init_cache(B, CAP, layout="paged", page_size=ps,
+                             kv_dtype="int8")
+    _, cache = model.prefill(params, toks, cache)
+    # slot 1 dies; its replacement forks slot 0's prefix run
+    cache = epaging.release_slot_pages(cache, jnp.array([False, True]))
+    cache = epaging.fork_prefix(cache, cache.block_table[0, :S // ps],
+                                jnp.array([False, True]), S)
+    bt = np.asarray(cache.block_table)
+    np.testing.assert_array_equal(bt[1, :S // ps], bt[0, :S // ps])
+    assert (np.asarray(cache.refcount)[bt[0, :S // ps]] == 2).all()
+    nxt = jnp.full((B,), int(row[0, -1]), jnp.int32)
+    logits, cache = model.decode_step(params, nxt, cache)
+    np.testing.assert_array_equal(np.asarray(logits[0]),
+                                  np.asarray(logits[1]))
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity across kv_dtypes
+# ---------------------------------------------------------------------------
+
+def _greedy_run(model, params, env, rng, **kw):
+    eng = CompiledRolloutEngine(model, env, **ENGINE_KW,
+                                cache_layout="paged", page_size=8, **kw)
+    exp, stats = eng.run(params, rng, 4, n_episodes=4)
+    return exp, stats
+
+
+def test_engine_int8_greedy_top1_agreement(model_and_params, rng):
+    """Greedy rollouts on int8 pages agree with fp32 top-1 on >= 99% of
+    generated tokens over the tictactoe/bandit parity grids (the
+    quantization-noise acceptance gate). Once a row's trajectories
+    diverge the two engines decode DIFFERENT contexts, so agreement is
+    scored only while the row's token prefix is still identical — the
+    argmax flip rate given the same KV state. The random-init smoke
+    model's near-uniform logits make this a WORST case (top-2 margins
+    are tiny); the gate pools both grids, with per-env sanity floors."""
+    model, params = model_and_params
+    kw = dict(ENGINE_KW, max_turn_tokens=4)
+    pooled = {"agree": 0, "total": 0}
+    for env_name in ("tictactoe", "bandit"):
+        env = make_env(env_name)
+        engines = {dt: CompiledRolloutEngine(
+            model, env, **kw, cache_layout="paged", page_size=8,
+            kv_dtype=dt) for dt in ("fp32", "int8")}
+        agree_n = total = 0
+        for seed in range(3):
+            key = jax.random.fold_in(rng, seed)
+            runs = {}
+            for dt, eng in engines.items():
+                runs[dt], stats = eng.run(params, key, 8, n_episodes=16)
+                if dt == "int8":
+                    assert int(stats.kv_dropped_writes) == 0
+            t32 = np.asarray(runs["fp32"].tokens)
+            t8 = np.asarray(runs["int8"].tokens)
+            both = (np.asarray(runs["fp32"].gen_mask)
+                    & np.asarray(runs["int8"].gen_mask))
+            same_prefix = np.cumprod(t32 == t8, axis=1).astype(bool)
+            # a position counts while everything BEFORE it matches
+            valid = both & np.roll(same_prefix, 1, axis=1)
+            valid[:, 0] = both[:, 0]
+            agree_n += int((t32 == t8)[valid].sum())
+            total += int(valid.sum())
+        assert total >= 100, f"{env_name}: sample too small ({total})"
+        frac = agree_n / total
+        assert frac >= 0.95, \
+            f"{env_name}: top-1 agreement {frac:.3f} over {total} tokens"
+        pooled["agree"] += agree_n
+        pooled["total"] += total
+    frac = pooled["agree"] / pooled["total"]
+    assert frac >= 0.99, (f"pooled top-1 agreement {frac:.3f} over "
+                          f"{pooled['total']} tokens")
+
+
+def test_engine_bf16_kv_dtype_is_the_default(model_and_params, rng):
+    """Passing kv_dtype="bf16" explicitly is bit-identical to the default
+    engine — the new knob cannot perturb existing trajectories."""
+    model, params = model_and_params
+    env = make_env("tictactoe")
+    exp_a, _ = _greedy_run(model, params, env, rng)
+    exp_b, _ = _greedy_run(model, params, env, rng, kv_dtype="bf16")
+    np.testing.assert_array_equal(np.asarray(exp_a.tokens),
+                                  np.asarray(exp_b.tokens))
+    np.testing.assert_array_equal(np.asarray(exp_a.logprobs),
+                                  np.asarray(exp_b.logprobs))
+
+
+def test_engine_int8_composes_with_share_prefix(model_and_params, rng):
+    """int8 pages + CoW prefix sharing: same pool budget as the unshared
+    int8 engine, zero dropped writes, full episode count — quantization
+    does not leak pages or break the fork lifecycle."""
+    model, params = model_and_params
+    env = make_env("bandit", prompt_len=24)
+    kw = dict(max_turns=1, max_turn_tokens=2, max_context=96,
+              temperature=0.0, cache_layout="paged", page_size=8,
+              kv_dtype="int8")
+    base = CompiledRolloutEngine(model, env, **kw)
+    shared = CompiledRolloutEngine(model, env, share_prefix=True, **kw)
+    _, s0 = base.run(params, rng, 4, n_episodes=8)
+    _, s1 = shared.run(params, rng, 4, n_episodes=8)
+    assert s1.shared_prefix_len > 0
+    assert int(s1.episodes_returned) == 8
+    assert int(s1.kv_dropped_writes) == int(s0.kv_dropped_writes) == 0
+    assert s1.pages_in_use < s0.pages_in_use     # prefix pages shared
+
+
+def test_engine_int8_requires_paged_layout(model_and_params):
+    model, _ = model_and_params
+    env = make_env("bandit")
+    with pytest.raises(ValueError):
+        CompiledRolloutEngine(model, env, **ENGINE_KW, kv_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# Fused sample-and-write in the engine
+# ---------------------------------------------------------------------------
+
+def test_engine_fused_sampling_greedy_bitwise(model_and_params, rng):
+    """sampling="fused" (one kernel pass: sample + feed the decode write)
+    reproduces the reference engine's greedy trajectory bit-for-bit —
+    tokens AND recorded logprobs."""
+    model, params = model_and_params
+    env = make_env("tictactoe")
+    ref, _ = _greedy_run(model, params, env, rng)
+    fus, _ = _greedy_run(model, params, env, rng, sampling="fused")
+    np.testing.assert_array_equal(np.asarray(ref.tokens),
+                                  np.asarray(fus.tokens))
+    np.testing.assert_array_equal(np.asarray(ref.logprobs),
+                                  np.asarray(fus.logprobs))
+
+
+def test_engine_fused_sampling_temperature_token_identical(
+        model_and_params, rng):
+    """Under temperature sampling the fused kernel draws the same Gumbel
+    stream jax.random.categorical uses, so trajectories stay
+    token-identical to the reference sampler."""
+    model, params = model_and_params
+    env = make_env("tictactoe")
+    kw = dict(ENGINE_KW, temperature=0.8)
+    a = CompiledRolloutEngine(model, env, **kw, cache_layout="paged",
+                              page_size=8)
+    b = CompiledRolloutEngine(model, env, **kw, cache_layout="paged",
+                              page_size=8, sampling="fused")
+    exp_a, _ = a.run(params, rng, 4, n_episodes=4)
+    exp_b, _ = b.run(params, rng, 4, n_episodes=4)
+    np.testing.assert_array_equal(np.asarray(exp_a.tokens),
+                                  np.asarray(exp_b.tokens))
+
+
+# ---------------------------------------------------------------------------
+# One-time ref-fallback warning (share_prefix + ref model)
+# ---------------------------------------------------------------------------
+
+def test_ref_fallback_warns_once_with_reason(model_and_params):
+    from repro.core.stages import EarlTrainer
+    model, params = model_and_params
+    env = make_env("bandit", prompt_len=24)
+    tr = EarlTrainer(model=model, env=env, batch_size=2, max_turns=1,
+                     max_turn_tokens=2, max_context=96,
+                     rollout_backend="compiled", cache_layout="paged",
+                     page_size=8, share_prefix=True)
+    assert not tr.ref_folded
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        tr._maybe_warn_ref_fallback(params)
+        tr._maybe_warn_ref_fallback(params)      # second call: silent
+    msgs = [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    assert len(msgs) == 1
+    assert "share_prefix" in str(msgs[0].message)
+    assert "ExpPrep" in str(msgs[0].message)
+
+
+def test_no_ref_fallback_warning_when_folded(model_and_params):
+    from repro.core.stages import EarlTrainer
+    model, params = model_and_params
+    env = make_env("bandit")
+    tr = EarlTrainer(model=model, env=env, batch_size=2, max_turns=1,
+                     max_turn_tokens=2, max_context=96)
+    assert tr.ref_folded
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        tr._maybe_warn_ref_fallback(params)
+    assert not [w for w in rec if issubclass(w.category, RuntimeWarning)]
