@@ -2,7 +2,7 @@
 vs paged KV cache layouts under episode churn, and copy-on-write prefix
 sharing under a long shared prompt.
 
-Three regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
+Four regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
 
 1. **Engine grid** — generated tokens/s for the python reference vs the
    compiled engine across batch sizes and turn budgets. The python loop
@@ -27,6 +27,12 @@ Three regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
    wave's obs feed shrinks from ``obs_len`` to ``suffix`` decode steps
    and the prompt occupies one page run instead of one per slot.
 
+4. **Pressure regime** (``on_exhaust`` policies on a half-sized pool,
+   tictactoe with a shared prompt) — the graceful-degradation cost
+   curve: a right-sized pool vs half-sized under ``"count"`` (drops KV
+   writes) vs half-sized under ``"preempt"`` (zero drops; the governor
+   stalls/evicts/re-admits and the price appears as tokens/s).
+
     PYTHONPATH=src python -m benchmarks.bench_rollout
         [--batches 2,8] [--max-turns 3] [--repeats 3]
         [--churn-mult 4] [--page-size 8] [--prompt-len 40]
@@ -44,6 +50,9 @@ CSV (churn): layout,kv_dtype,env,batch,episodes,gen_tokens,seconds,
 CSV (shared): share_prefix,kv_dtype,env,batch,episodes,gen_tokens,
              seconds,tokens_per_s,peak_pages,pool_pages,
              shared_prefix_len
+CSV (pressure): policy,pool_pages,env,batch,episodes,gen_tokens,
+             seconds,tokens_per_s,kv_dropped_writes,preemptions,
+             requeue_depth
 
 ``main`` returns the rows as a dict so ``benchmarks/run.py`` can write
 ``BENCH_rollout.json`` for cross-PR perf tracking.
@@ -261,6 +270,74 @@ def _shared_prefix_section(args, model, params):
     return rows
 
 
+def _pressure_section(args, model, params):
+    """Pool-pressure regime: what an UNDERSIZED pool costs under each
+    ``on_exhaust`` policy. Three pools on the shared-prompt tictactoe
+    workload: right-sized (exhaustion-free provisioning), half-sized
+    with ``"count"`` (tolerates drops — episodes silently lose context),
+    and half-sized with ``"preempt"`` (zero drops; the governor stalls /
+    evicts / re-admits, so the cost shows up as tokens/s instead of as
+    lost KV). The preempt rows' value is the completeness guarantee —
+    compare their tokens_per_s against right-sized to read the
+    throughput price of halving pool memory."""
+    from repro.models import paging
+    from repro.rl.engine import CompiledRolloutEngine
+    from repro.rl.envs import make_env
+    from repro.utils.faults import undersize_pool
+
+    env = make_env("tictactoe")
+    mt, mtt, T, ps = 3, args.max_turn_tokens, args.max_context, \
+        args.page_size
+    batches = [int(b) for b in args.batches.split(",")]
+    print("\n# pressure regime: tictactoe share_prefix, half-sized pool "
+          "under each on_exhaust policy")
+    print("# policy,pool_pages,env,batch,episodes,gen_tokens,seconds,"
+          "tokens_per_s,kv_dropped_writes,preemptions,requeue_depth")
+    rows = []
+    base_kw = dict(max_turns=mt, max_turn_tokens=mtt, max_context=T,
+                   temperature=1.0, cache_layout="paged", page_size=ps,
+                   share_prefix=True)
+    for B in batches:
+        N = 2 * B
+        probe = CompiledRolloutEngine(model, env, **base_kw)
+        full = paging.pool_pages_needed_shared(B, T, probe.shared_len, ps)
+        half = undersize_pool(full, 0.5, probe.min_pool_pages(B))
+        configs = [
+            ("right_sized/count", "count", full),
+            ("half/count", "count", half),
+            ("half/preempt", "preempt", half),
+        ]
+        by = {}
+        for label, policy, pool in configs:
+            eng = CompiledRolloutEngine(model, env, **base_kw,
+                                        on_exhaust=policy,
+                                        cache_pages=pool)
+            toks, secs, stats = _bench_engine(eng, params, B,
+                                              args.repeats, n_episodes=N)
+            tps = toks / max(secs, 1e-9)
+            rows.append(dict(policy=label, pool_pages=pool,
+                             env="tictactoe", batch=B, episodes=N,
+                             gen_tokens=toks, seconds=round(secs, 3),
+                             tokens_per_s=round(tps, 1),
+                             kv_dropped_writes=int(
+                                 stats.kv_dropped_writes),
+                             preemptions=int(stats.preemptions),
+                             requeue_depth=int(stats.requeue_depth)))
+            by[label] = rows[-1]
+            print(f"{label},{pool},tictactoe,{B},{N},{toks},{secs:.3f},"
+                  f"{tps:.1f},{rows[-1]['kv_dropped_writes']},"
+                  f"{rows[-1]['preemptions']},"
+                  f"{rows[-1]['requeue_depth']}")
+        rs, hp = by["right_sized/count"], by["half/preempt"]
+        print(f"# batch={B}: preempt at {hp['pool_pages']}/"
+              f"{rs['pool_pages']} pages keeps 0 dropped writes "
+              f"({hp['preemptions']} preemption(s)) at "
+              f"{hp['tokens_per_s'] / max(rs['tokens_per_s'], 1e-9):.2f}x "
+              f"right-sized tokens/s; count mode dropped "
+              f"{by['half/count']['kv_dropped_writes']} write(s)")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -284,7 +361,9 @@ def main(argv=None):
     grid = _grid_section(args, model, params, env)
     churn = _churn_section(args, model, params)
     shared = _shared_prefix_section(args, model, params)
-    return {"engine_grid": grid, "churn": churn, "shared_prefix": shared}
+    pressure = _pressure_section(args, model, params)
+    return {"engine_grid": grid, "churn": churn,
+            "shared_prefix": shared, "pressure": pressure}
 
 
 if __name__ == "__main__":

@@ -79,6 +79,12 @@ class StepRecord:
     pages_in_use: int = 0
     page_capacity: int = 0
     kv_dropped_writes: int = 0
+    # graceful-degradation telemetry (0 unless the mode is armed):
+    # pressure-governor evictions, peak re-admission queue depth, and
+    # host-side pool growth events this step
+    preemptions: int = 0
+    requeue_depth: int = 0
+    pool_grows: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -263,10 +269,23 @@ class EarlTrainer:
     kv_dtype: str = "bf16"                  # "fp32"|"bf16"|"int8" (paged)
     share_prefix: bool = False              # paged: fork shared-prompt pages
     prefix_len: Optional[int] = None        # None = env.prompt_prefix_len
-    on_exhaust: str = "count"               # "count" | "raise" on pool drop
+    on_exhaust: str = "count"               # "count"|"raise"|"preempt"
+    pool_growth: str = "off"                # paged: "off" | "double"
+    pool_growth_max: Optional[int] = None   # growth cap (None = full)
+    admit_watermark: Optional[int] = None   # preempt: free-page watermark
     pipeline: str = "sync"                  # "sync" | "async"
     max_policy_lag: int = 1                 # async: bounded staleness
     is_rho_max: float = 0.0                 # truncated-IS cap (0 = off)
+    # fault tolerance (core/scheduler.py): step retry w/ backoff +
+    # periodic checkpoint / auto-resume through checkpoint/checkpoint.py
+    max_retries: int = 0
+    retry_backoff_s: float = 0.05
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    resume: bool = False
+    # deterministic fault injection (utils/faults.FaultInjector): stage
+    # exceptions at chosen steps + pool-pressure undersizing
+    faults: Optional[Any] = None
     seed: int = 0
 
     history: List[StepRecord] = field(default_factory=list)
@@ -291,7 +310,9 @@ class EarlTrainer:
                 cache_pages=self.cache_pages, kv_dtype=self.kv_dtype,
                 sampling=self.sampling,
                 share_prefix=self.share_prefix, prefix_len=self.prefix_len,
-                on_exhaust=self.on_exhaust, **kw)
+                on_exhaust=self.on_exhaust, pool_growth=self.pool_growth,
+                pool_growth_max=self.pool_growth_max,
+                admit_watermark=self.admit_watermark, **kw)
         elif self.rollout_backend == "python":
             if self.rollout_episodes is not None:
                 raise ValueError(
@@ -317,6 +338,12 @@ class EarlTrainer:
                     "sampling='fused' requires rollout_backend='compiled' "
                     "(the fused sample-and-write step lives in the "
                     "compiled decode scan)")
+            if self.on_exhaust == "preempt" or self.pool_growth != "off":
+                raise ValueError(
+                    "on_exhaust='preempt' / pool_growth require "
+                    "rollout_backend='compiled' with cache_layout='paged' "
+                    "(the pressure governor and pool growth act on the "
+                    "paged pool inside the compiled macro-step)")
             self.rollout = RolloutEngine(self.model, self.env, **kw)
         else:
             raise ValueError(
@@ -339,6 +366,39 @@ class EarlTrainer:
             self.model, self.optimizer, clip_eps=self.clip_eps,
             kl_coef=self.kl_coef, is_rho_max=self.is_rho_max)
         self._rng = jax.random.PRNGKey(self.seed)
+
+        # injected pool pressure: undersize the paged pool to a fraction
+        # of the exhaustion-free provisioning, clamped to the preemption
+        # governor's minimum viable pool so the pressure stays
+        # *recoverable* (utils/faults.undersize_pool)
+        if self.faults is not None \
+                and getattr(self.faults, "pool_pressure", 0) > 0:
+            if self.rollout_backend != "compiled" \
+                    or self.cache_layout != "paged":
+                raise ValueError(
+                    "pool_pressure fault injection requires "
+                    "rollout_backend='compiled' with cache_layout='paged'")
+            from repro.models.paging import (pool_pages_needed,
+                                             pool_pages_needed_shared)
+            from repro.utils.faults import undersize_pool
+            eng = self.rollout
+            if eng.shared_pages > 0:
+                full = pool_pages_needed_shared(
+                    self.batch_size, self.max_context, eng.shared_len,
+                    self.page_size)
+            else:
+                full = pool_pages_needed(self.batch_size,
+                                         self.max_context, self.page_size)
+            floor = (eng.min_pool_pages(self.batch_size)
+                     if self.on_exhaust == "preempt" else 1)
+            eng.cache_pages = undersize_pool(
+                full, self.faults.pool_pressure, floor)
+
+    def check_fault(self, site: str, step: int) -> None:
+        """Stage-boundary hook for deterministic fault injection; no-op
+        without an armed injector (utils/faults.FaultInjector)."""
+        if self.faults is not None:
+            self.faults.check(site, step)
 
     # ------------------------------------------------------------------
     def init_state(self, rng=None):
@@ -377,6 +437,9 @@ class EarlTrainer:
             pages_in_use=stats.pages_in_use,
             page_capacity=stats.page_capacity,
             kv_dropped_writes=stats.kv_dropped_writes,
+            preemptions=getattr(stats, "preemptions", 0),
+            requeue_depth=getattr(stats, "requeue_depth", 0),
+            pool_grows=getattr(stats, "pool_grows", 0),
         )
         self.history.append(rec)
         return rec
@@ -411,6 +474,7 @@ class EarlTrainer:
 
         # ① Rollout (+ folded ref pass). Both engines share the run
         # signature; n_episodes > batch_size engages slot refill.
+        self.check_fault("rollout", step)
         exp, stats, switch = self.rollout_stage(
             step, params, self._next_rng(), self.batch_size,
             n_episodes=self.rollout_episodes,
@@ -424,6 +488,7 @@ class EarlTrainer:
                                  ref_folded=self.ref_folded)
 
         # ③④⑤ Dispatch to the Update layout
+        self.check_fault("dispatch", step)
         exp, dispatch_row = self.dispatch_stage(exp, dst_shardings)
 
         # Model Update. The selector's update-stage config is *tracked*
@@ -435,6 +500,7 @@ class EarlTrainer:
         if self.selector is not None and self.selector.policy is not None:
             self.selector.maybe_switch(step, stage="update")
         t1 = time.perf_counter()
+        self.check_fault("update", step)
         params, opt_state, metrics = self.update_stage(params, opt_state,
                                                        exp)
         loss = float(metrics["loss"])        # blocks: sync schedule
@@ -459,7 +525,12 @@ class EarlTrainer:
         if params is None:
             params, opt_state, ref_params = self.init_state()
         sched = PipelineSchedule(self, mode=self.pipeline,
-                                 max_policy_lag=self.max_policy_lag)
+                                 max_policy_lag=self.max_policy_lag,
+                                 max_retries=self.max_retries,
+                                 retry_backoff_s=self.retry_backoff_s,
+                                 checkpoint_dir=self.checkpoint_dir,
+                                 checkpoint_every=self.checkpoint_every,
+                                 resume=self.resume)
         return sched.run(n_steps, params=params, opt_state=opt_state,
                          ref_params=ref_params, dst_shardings=dst_shardings,
                          verbose=verbose)

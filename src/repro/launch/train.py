@@ -27,6 +27,7 @@ from repro.core.stages import EarlTrainer
 from repro.models.registry import build_model
 from repro.optim.adamw import adamw
 from repro.rl.envs import make_env
+from repro.utils.faults import FaultInjector
 
 
 def main(argv=None):
@@ -65,11 +66,22 @@ def main(argv=None):
                     help="override the env-declared shared-prompt length "
                          "in tokens (full pages of it are shared)")
     ap.add_argument("--on-exhaust", default="count",
-                    choices=["count", "raise"],
+                    choices=["count", "raise", "preempt"],
                     help="paged pool exhaustion: 'count' records dropped "
                          "KV writes in telemetry (default); 'raise' fails "
-                         "the rollout instead of silently truncating "
-                         "episode context")
+                         "the rollout with per-slot shortfalls; 'preempt' "
+                         "evicts the longest-context slot and re-queues "
+                         "its episode — zero dropped writes, an "
+                         "undersized pool just runs slower")
+    ap.add_argument("--pool-growth", default="off",
+                    choices=["off", "double"],
+                    help="paged layout: double the page pool between "
+                         "macro-steps when it shows distress (dropped "
+                         "write, preemption, or free pages under the "
+                         "admission watermark), up to --pool-growth-max")
+    ap.add_argument("--pool-growth-max", type=int, default=None,
+                    help="pool growth cap in pages (default: full "
+                         "per-slot provisioning)")
     ap.add_argument("--kv-dtype", default="bf16",
                     choices=["fp32", "bf16", "int8"],
                     help="KV cache element type; int8 (paged layout only) "
@@ -105,6 +117,30 @@ def main(argv=None):
                     choices=["reinforce", "group"])
     ap.add_argument("--dispatch", default="direct",
                     choices=["direct", "centralized"])
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for periodic {params, opt_state, rng} "
+                         "checkpoints (checkpoint/checkpoint.py)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="save a checkpoint every N completed steps "
+                         "(0 = off; requires --checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="auto-resume from the latest checkpoint in "
+                         "--checkpoint-dir when one exists")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="step-level retries (sync) / checkpoint restarts "
+                         "(async) before a stage failure aborts the run")
+    ap.add_argument("--retry-backoff", type=float, default=0.05,
+                    help="base retry backoff in seconds (doubles per "
+                         "attempt)")
+    ap.add_argument("--inject-fault", action="append", default=None,
+                    metavar="SITE@STEP[*TIMES]",
+                    help="deterministically raise at a stage boundary, "
+                         "e.g. 'update@3' or 'rollout@1*2' (sites: "
+                         "rollout, dispatch, update; repeatable) — the "
+                         "fault-injection harness for recovery testing")
+    ap.add_argument("--inject-pool-pressure", type=float, default=0.0,
+                    help="undersize the paged pool to this fraction of "
+                         "its exhaustion-free provisioning (0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log", default="train_log.jsonl")
     ap.add_argument("--smoke", action="store_true",
@@ -135,9 +171,20 @@ def main(argv=None):
         cache_layout=args.cache_layout, page_size=args.page_size,
         cache_pages=args.cache_pages, share_prefix=args.share_prefix,
         prefix_len=args.prefix_len, on_exhaust=args.on_exhaust,
+        pool_growth=args.pool_growth,
+        pool_growth_max=args.pool_growth_max,
         kv_dtype=args.kv_dtype, sampling=args.sampling, top_p=args.top_p,
         pipeline=args.pipeline,
         max_policy_lag=args.max_policy_lag,
+        max_retries=args.max_retries,
+        retry_backoff_s=args.retry_backoff,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
+        faults=(FaultInjector.parse(args.inject_fault,
+                                    args.inject_pool_pressure)
+                if args.inject_fault or args.inject_pool_pressure > 0
+                else None),
         # lag 0 experience is on-policy: arming the correction there
         # would only inject decode-vs-forward fp noise into the weights
         # and break the documented sync-equivalence of lag-0 async runs
@@ -165,7 +212,11 @@ def main(argv=None):
                 "policy_lag": rec.policy_lag,
                 "is_weight_mean": rec.is_weight_mean,
                 "pages_in_use": rec.pages_in_use,
+                "page_capacity": rec.page_capacity,
                 "kv_dropped_writes": rec.kv_dropped_writes,
+                "preemptions": rec.preemptions,
+                "requeue_depth": rec.requeue_depth,
+                "pool_grows": rec.pool_grows,
             }
             f.write(json.dumps(row) + "\n")
     print(f"done: {args.steps} steps in {wall:.1f}s "

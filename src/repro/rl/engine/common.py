@@ -60,6 +60,14 @@ class RolloutStats:
     # prefilled per slot — both the per-wave FLOP cut and the
     # pages_in_use reduction scale with this
     shared_prefix_len: int = 0
+    # graceful degradation under pool pressure (all 0 unless the
+    # corresponding mode is on): slots evicted by the preemption
+    # governor (each re-runs its episode from scratch), the peak number
+    # of episodes waiting for re-admission, and host-side pool growth
+    # events (pool_growth="double")
+    preemptions: int = 0            # slots evicted under memory pressure
+    requeue_depth: int = 0          # peak episodes awaiting re-admission
+    pool_grows: int = 0             # host-side pool doublings
 
 
 # ---------------------------------------------------------------------------
@@ -84,6 +92,30 @@ def env_rng(trng):
 def sample_rng(trng, t: int):
     """Key for the t-th sampled token within a turn."""
     return jax.random.fold_in(trng, 2 + t)
+
+
+# Episode-keyed derivation (on_exhaust="preempt" only). Preemption
+# replays an episode from scratch in a *different* slot at a *different*
+# macro-step, so any randomness keyed per (macro-step, row) — the
+# derivation above — would change under rescheduling and the replay
+# would diverge from the original run. These keys depend ONLY on the
+# run base and the episode's own coordinates (id, env-step index), so a
+# greedy-decoded episode is a pure function of (params, episode id):
+# bit-identical whether it ran straight through, was preempted and
+# replayed, or ran against a differently sized pool. (Non-greedy
+# sampling still consumes per-(macro-step, token) keys and is NOT
+# schedule-invariant — documented in rl/engine/README.md.)
+
+def episode_reset_rng(brng, eid):
+    """Env-reset key for episode ``eid`` — identical at first launch and
+    at every re-admission after a preemption."""
+    return jax.random.fold_in(jax.random.fold_in(brng, 0), eid)
+
+
+def episode_env_rng(brng, eid, turn):
+    """Env-transition key for env step ``turn`` of episode ``eid``."""
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(brng, 1), eid), turn)
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +187,8 @@ def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
               episodes_started: int, episodes_returned: int,
               params_version: int = -1, pages_in_use: int = 0,
               page_capacity: int = 0, kv_dropped_writes: int = 0,
-              shared_prefix_len: int = 0) -> RolloutStats:
+              shared_prefix_len: int = 0, preemptions: int = 0,
+              requeue_depth: int = 0, pool_grows: int = 0) -> RolloutStats:
     turn_lengths = np.asarray(turn_lengths)
     context_lengths = np.asarray(context_lengths)
     tl = turn_lengths[turn_lengths > 0]
@@ -174,4 +207,7 @@ def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
         page_capacity=int(page_capacity),
         kv_dropped_writes=int(kv_dropped_writes),
         shared_prefix_len=int(shared_prefix_len),
+        preemptions=int(preemptions),
+        requeue_depth=int(requeue_depth),
+        pool_grows=int(pool_grows),
     )

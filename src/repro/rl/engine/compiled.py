@@ -69,6 +69,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.rl.algo import reinforce_advantages
@@ -125,7 +126,10 @@ class CompiledRolloutEngine:
                  kv_dtype: str = "bf16",
                  share_prefix: bool = False,
                  prefix_len: Optional[int] = None,
-                 on_exhaust: str = "count"):
+                 on_exhaust: str = "count",
+                 pool_growth: str = "off",
+                 pool_growth_max: Optional[int] = None,
+                 admit_watermark: Optional[int] = None):
         cfg = model.cfg
         assert ACTION_BASE + env.n_actions <= cfg.vocab_size
         assert getattr(env, "jit_safe", False), (
@@ -138,9 +142,21 @@ class CompiledRolloutEngine:
             raise ValueError(
                 "attn_impl='paged' requires cache_layout='paged' (the "
                 "kernel reads the pool through the block table)")
-        if on_exhaust not in ("count", "raise"):
-            raise ValueError(f"on_exhaust must be 'count' or 'raise', got "
-                             f"{on_exhaust!r}")
+        if on_exhaust not in ("count", "raise", "preempt"):
+            raise ValueError(f"on_exhaust must be 'count', 'raise' or "
+                             f"'preempt', got {on_exhaust!r}")
+        if on_exhaust == "preempt" and cache_layout != "paged":
+            raise ValueError(
+                "on_exhaust='preempt' requires cache_layout='paged' (the "
+                "pressure governor releases and re-admits pool pages; "
+                "dense rows have nothing to preempt)")
+        if pool_growth not in ("off", "double"):
+            raise ValueError(f"pool_growth must be 'off' or 'double', got "
+                             f"{pool_growth!r}")
+        if pool_growth != "off" and cache_layout != "paged":
+            raise ValueError(
+                "pool_growth requires cache_layout='paged' (growth appends "
+                "free pages to the shared pool)")
         if share_prefix and cache_layout != "paged":
             raise ValueError(
                 "share_prefix requires cache_layout='paged' (sharing works "
@@ -173,6 +189,15 @@ class CompiledRolloutEngine:
         self.cache_pages = cache_pages      # None = full provisioning
         self.kv_dtype = kv_dtype
         self.on_exhaust = on_exhaust
+        self.pool_growth = pool_growth
+        self.pool_growth_max = pool_growth_max
+        # admission low-watermark (preempt mode): free pages the refill
+        # path must keep AFTER admitting — one full turn's worth for the
+        # slots already running, so admission never re-creates the
+        # exhaustion it is recovering from
+        self.admit_watermark = (
+            admit_watermark if admit_watermark is not None
+            else math.ceil((max_turn_tokens + env.obs_len) / page_size) + 1)
         self.share_prefix = share_prefix
         # the shared run covers FULL pages of the episode-initial
         # observation's common prefix, and never the whole observation:
@@ -206,6 +231,20 @@ class CompiledRolloutEngine:
         config costs nothing."""
         self._mesh_config = mesh_config
 
+    def min_pool_pages(self, batch: int) -> int:
+        """Smallest pool for which ``on_exhaust="preempt"`` can guarantee
+        zero dropped KV writes at batch ``batch``: the pool must hold (a)
+        one full-context episode — the designated survivor always makes
+        progress even with every other slot evicted — and (b) the
+        ungoverned initial feed, which fills every slot's initial
+        observation before the first macro-step's pressure plan runs
+        (``shared_pages`` pinned once + a private suffix per slot)."""
+        ps = self.page_size
+        pages_per_slot = -(-self.max_context // ps)
+        per_admit = -(-(self.env.obs_len - self.shared_len) // ps)
+        return max(pages_per_slot,
+                   self.shared_pages + batch * per_admit)
+
     # -- compiled macro-step ------------------------------------------------
     def _build_turn_step(self, B: int, N: int, with_ref: bool):
         model, env = self.model, self.env
@@ -224,7 +263,27 @@ class CompiledRolloutEngine:
         # With sharing ON it stays armed as insurance even though the
         # engine's page-aligned runs never trigger it.
         cow_kw = {"cow": False} if paged and shared_pages == 0 else {}
+        preempt = self.on_exhaust == "preempt"
+        per_admit = -(-(olen - shared_len) // page_size)
+        admit_wm = self.admit_watermark
         env_step = self._make_env_step(B)
+        if preempt:
+            # Row-wise env transition / reset with per-EPISODE keys
+            # (``common.episode_env_rng`` / ``episode_reset_rng``):
+            # preemption replays an episode in a different slot at a
+            # different macro-step, so env randomness must be a function
+            # of the episode's own coordinates, not the schedule's —
+            # that is what makes an undersized-pool preempt run
+            # bit-identical (greedy) to a right-sized one.
+            def _row_step(state, action, key):
+                one = lambda t: jax.tree.map(lambda x: x[0], t)
+                s2, r = env.step(jax.tree.map(lambda x: x[None], state),
+                                 action[None], key)
+                return one(s2), one(r)
+
+            rowwise_step = jax.vmap(_row_step)
+            rowwise_reset = jax.vmap(
+                lambda k: jax.tree.map(lambda x: x[0], env.reset(k, 1)))
         # envs usually declare reset_rows; the shared row-wise blend is
         # the fallback so a missing method isn't a runtime footgun
         reset_rows = getattr(
@@ -408,7 +467,8 @@ class CompiledRolloutEngine:
                                   ref_logprobs=ref_lp_buf, pos=pos,
                                   prefix_pages=prefix_pages)
 
-        def turn_step(params, ref_params, carry: slots.SlotCarry, trng):
+        def turn_step(params, ref_params, carry: slots.SlotCarry, trng,
+                      brng):
             # invariant: every live slot's observation is already fed (by
             # init_feed or the previous step's combined feed), so the turn
             # starts generating immediately
@@ -418,10 +478,48 @@ class CompiledRolloutEngine:
                           if with_ref else None)
             c = carry
 
+            # 0. memory-pressure governor (preempt mode): BEFORE anything
+            #    generates, plan which slots may write this turn and which
+            #    must be evicted. Stalled slots keep their pages and their
+            #    fed observation and simply sit the turn out; victims
+            #    release their private pages (prefix-shared pages survive
+            #    via refcounts) and their episode enters the requeue
+            #    bitmap for a from-scratch restart.
+            if preempt:
+                room0 = c.pos + mtt + olen <= T
+                elig = c.live & room0 & (c.n_turns < mturns)
+                npw = c.cache.block_table.shape[1]
+                tgt = jnp.minimum(c.pos + mtt + olen, npw * page_size)
+                tgt_pages = (tgt + page_size - 1) // page_size
+                mapped = jnp.sum((c.cache.block_table >= 0)
+                                 .astype(jnp.int32), axis=1)
+                demand = jnp.where(elig,
+                                   jnp.maximum(tgt_pages - mapped, 0), 0)
+                run_mask, victims = paging.pressure_plan(
+                    c.cache.refcount, c.cache.block_table, elig, c.pos,
+                    demand)
+                requeue = c.requeue.at[
+                    jnp.where(victims, c.episode, N)].set(
+                        True, mode="drop")
+                c = c._replace(
+                    cache=paging.release_slot_pages(c.cache, victims),
+                    live=c.live & ~victims,
+                    truncated=c.truncated & ~victims,
+                    episode=jnp.where(victims, N, c.episode),
+                    preempted=(c.preempted
+                               + jnp.sum(victims.astype(jnp.int32))),
+                    requeue=requeue,
+                    requeue_peak=jnp.maximum(
+                        c.requeue_peak,
+                        jnp.sum(requeue.astype(jnp.int32))),
+                )
+
             # 1. truncation / active set (same predicate as the reference)
             room = c.pos + mtt + olen <= T
             truncated = c.truncated | (c.live & ~room)
             active = c.live & room & (c.n_turns < mturns)
+            if preempt:
+                active = active & run_mask
 
             # 2. generation scan over decode steps (per-token keys from the
             #    shared derivation — the parity contract with the python
@@ -457,10 +555,23 @@ class CompiledRolloutEngine:
                 jnp.where(active, tl, 0))
             n_turns = c.n_turns + active.astype(jnp.int32)
 
-            # 4. env transition (inactive rows absorb inside env.step)
+            # 4. env transition (inactive rows absorb inside env.step).
+            #    Preempt mode steps row-wise with episode-keyed rng and
+            #    blends inactive rows back to their prior state — a
+            #    stalled slot must be a perfect no-op, not an env step
+            #    with a zero action.
             env_actions = jnp.where(active, actions, 0).astype(jnp.int32)
-            state2, res = env_step(c.env_state, env_actions,
-                                   common.env_rng(trng))
+            if preempt:
+                ekeys = jax.vmap(
+                    lambda e, t: common.episode_env_rng(brng, e, t))(
+                        c.episode, c.n_turns)
+                s2f, res = rowwise_step(c.env_state, env_actions, ekeys)
+                keep = lambda new, old: jnp.where(
+                    active.reshape((B,) + (1,) * (new.ndim - 1)), new, old)
+                state2 = jax.tree.map(keep, s2f, c.env_state)
+            else:
+                state2, res = env_step(c.env_state, env_actions,
+                                       common.env_rng(trng))
 
             # 5. episodes finishing this turn (terminal / truncated / out
             #    of turn budget) -> harvest into the episode store
@@ -480,11 +591,44 @@ class CompiledRolloutEngine:
 
             # 6. slot refill: reset fresh episodes into freed slots
             #    (lax.cond skips the env reset and buffer/cache resets on
-            #    the common no-refill step)
-            refill, new_ids, launched = slots.refill_plan(
-                finished, c.launched, N)
-            r1 = refill[:, None]
+            #    the common no-refill step). Preempt mode swaps the plain
+            #    refill plan for the watermark-gated admission plan: ALL
+            #    finished slots release their pages first (headroom must
+            #    see them), re-queued episodes are re-admitted before any
+            #    fresh launch, and admission is capped so that free pages
+            #    after the continuing slots' obs feeds stay above the
+            #    low-watermark.
             rrng = common.reset_rng(trng)
+            if preempt:
+                cache = paging.release_slot_pages(cache, finished)
+                free_now = jnp.sum((cache.refcount == 0)
+                                   .astype(jnp.int32))
+                npw = cache.block_table.shape[1]
+                mapped_now = jnp.sum((cache.block_table >= 0)
+                                     .astype(jnp.int32), axis=1)
+                cont_pre = active & ~state2.done & ~finished
+                tgt2 = jnp.minimum(pos + olen, npw * page_size)
+                tgt2_pages = (tgt2 + page_size - 1) // page_size
+                reserved = jnp.sum(jnp.where(
+                    cont_pre, jnp.maximum(tgt2_pages - mapped_now, 0), 0))
+                quota = jnp.maximum(
+                    (free_now - reserved - admit_wm) // per_admit, 0)
+                # deadlock breaker: with no survivor but work remaining,
+                # every unpinned page is free (finished + victims all
+                # released) — admit at least one episode so the rollout
+                # always drains (min_pool_pages guarantees it fits)
+                surv = jnp.any(c.live & ~finished)
+                work_left = (c.launched < N) | jnp.any(c.requeue)
+                quota = jnp.where(~surv & work_left,
+                                  jnp.maximum(quota, 1), quota)
+                free_slots = finished | (~c.live & ~victims)
+                refill, new_ids, launched, requeue = slots.admission_plan(
+                    free_slots, c.requeue, c.launched, N, quota)
+            else:
+                refill, new_ids, launched = slots.refill_plan(
+                    finished, c.launched, N)
+                requeue = c.requeue
+            r1 = refill[:, None]
 
             def do_reset(args):
                 cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf, \
@@ -497,6 +641,19 @@ class CompiledRolloutEngine:
                     # prefix's KV is never recomputed for a refill
                     cache = paging.fork_prefix(cache, c.prefix_pages,
                                                refill, shared_len)
+                if preempt:
+                    # episode-keyed reset: a re-admitted episode draws the
+                    # SAME initial state it drew at first launch
+                    rkeys = jax.vmap(
+                        lambda e: common.episode_reset_rng(brng, e))(
+                            jnp.where(refill, new_ids, 0))
+                    fresh = rowwise_reset(rkeys)
+                    keep = lambda new, old: jnp.where(
+                        refill.reshape((B,) + (1,) * (new.ndim - 1)),
+                        new, old)
+                    state_reset = jax.tree.map(keep, fresh, state)
+                else:
+                    state_reset = reset_rows(rrng, state, refill)
                 return (cache,
                         (_reset_cache_rows(ref_cache, refill)
                          if with_ref else ref_cache),
@@ -509,7 +666,7 @@ class CompiledRolloutEngine:
                         jnp.where(refill, 0, n_turns),
                         jnp.where(r1, 0, tls),
                         jnp.where(refill, 0, shortfall),
-                        reset_rows(rrng, state, refill))
+                        state_reset)
 
             (cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf,
              pos, n_turns, turn_lengths, kv_shortfall, state3) = lax.cond(
@@ -575,7 +732,7 @@ class CompiledRolloutEngine:
                 logprobs=logprobs,
                 pos=pos,
                 live=(c.live & ~finished) | refill,
-                truncated=jnp.where(finished, False, truncated),
+                truncated=jnp.where(finished | refill, False, truncated),
                 n_turns=n_turns,
                 turn_lengths=turn_lengths,
                 episode=jnp.where(refill, new_ids,
@@ -590,6 +747,9 @@ class CompiledRolloutEngine:
                 kv_dropped=kv_dropped,
                 kv_shortfall=kv_shortfall,
                 prefix_pages=c.prefix_pages,
+                preempted=c.preempted,
+                requeue=requeue,
+                requeue_peak=c.requeue_peak,
             )
 
         return init_feed, turn_step
@@ -637,16 +797,16 @@ class CompiledRolloutEngine:
         jf_init = jax.jit(init_feed, in_shardings=(None, None, carry_sh),
                           out_shardings=carry_sh, donate_argnums=(2,))
         jf_turn = jax.jit(turn_step,
-                          in_shardings=(None, None, carry_sh, None),
+                          in_shardings=(None, None, carry_sh, None, None),
                           out_shardings=carry_sh, donate_argnums=(2,))
 
         def call_init(params, ref_params, carry):
             with mesh:                       # anchor layers.constrain
                 return jf_init(params, ref_params, carry)
 
-        def call_turn(params, ref_params, carry, trng):
+        def call_turn(params, ref_params, carry, trng, brng):
             with mesh:
-                return jf_turn(params, ref_params, carry, trng)
+                return jf_turn(params, ref_params, carry, trng, brng)
 
         return call_init, call_turn
 
@@ -688,6 +848,11 @@ class CompiledRolloutEngine:
             kv_shortfall=bs(carry_abs.kv_shortfall),
             prefix_pages=(rep if carry_abs.prefix_pages is not None
                           else None),
+            preempted=(rep if carry_abs.preempted is not None else None),
+            requeue=(bs(carry_abs.requeue)
+                     if carry_abs.requeue is not None else None),
+            requeue_peak=(rep if carry_abs.requeue_peak is not None
+                          else None),
         )
 
     # -- carry init ---------------------------------------------------------
@@ -695,7 +860,19 @@ class CompiledRolloutEngine:
                     with_ref: bool = False) -> slots.SlotCarry:
         env, model = self.env, self.model
         T = self.max_context
-        state = env.reset(rng, B)
+        preempt = self.on_exhaust == "preempt"
+        if preempt:
+            # episode-keyed initial state: slot i starts episode i, drawn
+            # with the SAME key a later re-admission of episode i uses
+            brng = jax.random.fold_in(rng, 2)
+            keys = jax.vmap(
+                lambda e: common.episode_reset_rng(brng, e))(
+                    jnp.arange(B, dtype=jnp.int32))
+            state = jax.vmap(
+                lambda k: jax.tree.map(lambda x: x[0], env.reset(k, 1)))(
+                    keys)
+        else:
+            state = env.reset(rng, B)
         live = jnp.arange(B) < N
         if self.cache_layout == "paged":
             n_pages = self.cache_pages
@@ -746,6 +923,9 @@ class CompiledRolloutEngine:
             kv_shortfall=jnp.zeros((B,), jnp.int32),
             prefix_pages=(jnp.full((self.shared_pages,), -1, jnp.int32)
                           if self.shared_pages > 0 else None),
+            preempted=(jnp.asarray(0, jnp.int32) if preempt else None),
+            requeue=(jnp.zeros((N,), bool) if preempt else None),
+            requeue_peak=(jnp.asarray(0, jnp.int32) if preempt else None),
         )
 
     # ------------------------------------------------------------------
@@ -772,36 +952,104 @@ class CompiledRolloutEngine:
                 "separately (make_ref_logprob_step) or disable "
                 "share_prefix.")
 
+        preempt = self.on_exhaust == "preempt"
+        if preempt and self.cache_pages is not None \
+                and self.cache_pages < self.min_pool_pages(B):
+            raise ValueError(
+                f"cache_pages={self.cache_pages} is below the preemption "
+                f"governor's minimum viable pool "
+                f"({self.min_pool_pages(B)} pages for batch {B}): the "
+                f"pool must hold one full-context episode plus the "
+                f"initial observation feed of every slot, or the "
+                f"zero-drop guarantee cannot hold.")
+
         init_fn, turn_fn = self._get_compiled(B, N, with_ref)
         carry = init_fn(params, ref_params,
                         self._init_carry(rng, B, N, with_ref))
         base = jax.random.fold_in(rng, 1)
+        brng = jax.random.fold_in(rng, 2)
 
-        # worst case: every wave of B episodes uses its full turn budget
-        max_macro = self.max_turns * math.ceil(N / B) + 2
+        # worst case: every wave of B episodes uses its full turn budget;
+        # preemption additionally stalls slots and restarts episodes, so
+        # its budget assumes near-serial progress (one slot at a time)
+        # plus an admission turn per episode — generous, never binding
+        # for a pool above min_pool_pages
+        if preempt:
+            max_macro = (self.max_turns + 2) * (N + B) + 8
+        else:
+            max_macro = self.max_turns * math.ceil(N / B) + 2
         check_drops = self.on_exhaust == "raise" and \
             self.cache_layout == "paged"
+        grow = self.pool_growth == "double" and \
+            self.cache_layout == "paged"
+        pool_grows = 0
+        if grow:
+            from repro.models.paging import pool_pages_needed
+            grow_cap = (self.pool_growth_max
+                        if self.pool_growth_max is not None
+                        else pool_pages_needed(B, self.max_context,
+                                               self.page_size))
+            last_dropped = last_preempted = 0
         for m in range(max_macro):
             carry = turn_fn(params, ref_params, carry,
-                            common.turn_rng(base, m))
+                            common.turn_rng(base, m), brng)
             # ONE host sync per turn (the returned-counter read); the
-            # on_exhaust="raise" drop check rides the same sync point
+            # on_exhaust="raise" drop check and the pool-growth trigger
+            # ride the same sync point
             if check_drops and int(carry.kv_dropped) > 0:
+                short = np.asarray(carry.kv_shortfall)
+                bad = np.nonzero(short > 0)[0]
+                detail = ", ".join(
+                    f"slot {int(i)}: {int(short[i])} token(s)"
+                    for i in bad[:16]) + (" …" if bad.size > 16 else "")
+                extra = max(1, -(-int(short.sum()) // self.page_size))
                 raise RuntimeError(
                     f"KV page pool exhausted during rollout: "
                     f"{int(carry.kv_dropped)} dropped KV write(s) by "
-                    f"macro-step {m} (pool {int(carry.cache.refcount.shape[0])} "
-                    f"pages, peak in use {int(carry.pages_peak)}). The "
-                    f"affected episodes silently lost context; grow "
-                    f"cache_pages (see pool_pages_needed[_shared]) or set "
+                    f"macro-step {m}; per-slot shortfall {{{detail}}} "
+                    f"(pool {int(carry.cache.refcount.shape[0])} pages, "
+                    f"peak in use {int(carry.pages_peak)}). The affected "
+                    f"episodes silently lost context; grow cache_pages "
+                    f"by at least {extra} page(s) (see "
+                    f"pool_pages_needed[_shared]), set "
+                    f"pool_growth='double', use on_exhaust='preempt' to "
+                    f"trade throughput for completeness, or "
                     f"on_exhaust='count' to tolerate truncation.")
+            if grow:
+                # grow when the pool showed distress this turn: dropped
+                # writes (count mode), a preemption (preempt mode), or
+                # free pages under the admission watermark. Growth is a
+                # host-side pad of zeroed free pages between macro-steps;
+                # jit retraces for the new capacity (cached per shape).
+                cap = int(carry.cache.refcount.shape[0])
+                dropped = int(carry.kv_dropped)
+                pre = int(carry.preempted) if preempt else 0
+                free = int(jnp.sum(
+                    (carry.cache.refcount == 0).astype(jnp.int32)))
+                if cap < grow_cap and (
+                        dropped > last_dropped or pre > last_preempted
+                        or free < self.admit_watermark):
+                    carry = carry._replace(cache=paging.grow_pool(
+                        carry.cache, min(2 * cap, grow_cap)))
+                    pool_grows += 1
+                last_dropped, last_preempted = dropped, pre
             if int(carry.returned) >= N:
                 break
+        if preempt and int(carry.returned) < N:
+            raise RuntimeError(
+                f"preemption governor failed to drain the rollout: "
+                f"{int(carry.returned)}/{N} episodes returned after "
+                f"{max_macro} macro-steps (pool "
+                f"{int(carry.cache.refcount.shape[0])} pages, "
+                f"{int(carry.preempted)} preemption(s)); the pool is "
+                f"likely below min_pool_pages({B}) = "
+                f"{self.min_pool_pages(B)}.")
 
-        return self._finalize(carry, N, params_version)
+        return self._finalize(carry, N, params_version,
+                              pool_grows=pool_grows)
 
     def _finalize(self, carry: slots.SlotCarry, N: int,
-                  params_version: int = -1):
+                  params_version: int = -1, pool_grows: int = 0):
         store = carry.store
         exp = ExperienceBatch(
             tokens=store.tokens,
@@ -830,5 +1078,10 @@ class CompiledRolloutEngine:
             pages_in_use=int(carry.pages_peak),
             page_capacity=carry.cache.refcount.shape[0] if paged else 0,
             kv_dropped_writes=int(carry.kv_dropped),
-            shared_prefix_len=self.shared_len)
+            shared_prefix_len=self.shared_len,
+            preemptions=(int(carry.preempted)
+                         if carry.preempted is not None else 0),
+            requeue_depth=(int(carry.requeue_peak)
+                           if carry.requeue_peak is not None else 0),
+            pool_grows=int(pool_grows))
         return exp, stats

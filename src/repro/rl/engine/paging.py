@@ -21,6 +21,7 @@ Everything here is pure ``jnp`` and runs inside the compiled macro-step.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.models import paging
@@ -72,6 +73,115 @@ def fork_prefix(cache, prefix_pages, rows, prefix_len: int):
 def pool_stats(cache):
     """(pages_in_use, n_pages) for occupancy telemetry."""
     return paging.pages_in_use(cache.refcount), cache.refcount.shape[0]
+
+
+def pressure_plan(refcount, block_table, eligible, pos, demand):
+    """In-graph memory-pressure governor for ``on_exhaust="preempt"``.
+
+    Decides, BEFORE a turn generates anything, which eligible slots may
+    write this turn (``run``) and which live slots must be *preempted*
+    (``victims`` — pages released, episode re-queued) so that no KV write
+    can ever hit an exhausted pool:
+
+      1. **Throttle first**: slots run in (zero-demand, then shortest
+         context) order while their cumulative worst-case page demand
+         fits the free pool; the rest *stall* for the turn — they keep
+         their pages and their fed observation and simply wait (an
+         invariant-preserving no-op: a stalled slot neither generates
+         nor env-steps).
+      2. **Preempt only when stuck**: if not even the cheapest slot fits,
+         victims are taken longest-context-first — the issue's policy:
+         the slot holding the most pages frees the most — counting only
+         their *private* pages (``refcount == 1``; prefix-shared pages
+         survive their owners, so evicting them frees nothing and they
+         are excluded by construction). The smallest victim set that lets
+         the cheapest slot run is chosen; the cheapest slot itself is
+         never a victim, so one slot always makes progress.
+
+    eligible: (B,) bool — live slots that would generate this turn;
+    demand: (B,) int32 — worst-case NEW pages the slot can allocate this
+    turn (0 for ineligible rows). Returns ``(run, victims)`` bool masks.
+    Pure ``jnp`` (stable argsorts + cumsums), runs inside the macro-step.
+    """
+    refcount = jnp.asarray(refcount)
+    block_table = jnp.asarray(block_table)
+    eligible = jnp.asarray(eligible)
+    pos = jnp.asarray(pos).astype(jnp.int32)
+    demand = jnp.asarray(demand).astype(jnp.int32)
+    B = pos.shape[0]
+    P = refcount.shape[0]
+    BIG = jnp.iinfo(jnp.int32).max
+    free = jnp.sum((refcount == 0).astype(jnp.int32))
+
+    # -- run set: zero-demand rows always run; demanders shortest-first
+    #    while the cumulative demand fits the free pool
+    off = jnp.int32(1) << 20                 # > any pos; demanders sort after
+    asc_key = jnp.where(eligible, pos + off * (demand > 0), BIG)
+    asc = jnp.argsort(asc_key)               # stable: ties by row id
+    rank_asc = jnp.zeros((B,), jnp.int32).at[asc].set(
+        jnp.arange(B, dtype=jnp.int32))
+    cum = jnp.cumsum(demand[asc])
+    run_count = jnp.sum(((cum <= free) & eligible[asc]).astype(jnp.int32))
+    run = eligible & (rank_asc < run_count)
+
+    # -- victims: only when nothing can run. Candidates = eligible rows
+    #    minus the designated survivor (the cheapest slot), longest
+    #    context first; a victim frees its PRIVATE pages only.
+    survivor = eligible & (rank_asc == 0)
+    owned = block_table >= 0
+    page_rc = refcount[jnp.clip(block_table, 0, P - 1)]
+    freeable = jnp.sum((owned & (page_rc == 1)).astype(jnp.int32), axis=1)
+    vcand = eligible & ~survivor
+    desc = jnp.argsort(jnp.where(vcand, -pos, BIG))
+    rank_desc = jnp.zeros((B,), jnp.int32).at[desc].set(
+        jnp.arange(B, dtype=jnp.int32))
+    n_cand = jnp.sum(vcand.astype(jnp.int32))
+    sd = demand[asc[0]]                      # survivor's demand (garbage
+    #                                          when nothing is eligible —
+    #                                          gated by need_preempt)
+    cum_freed = jnp.cumsum(jnp.where(vcand[desc], freeable[desc], 0))
+    k_grid = jnp.arange(1, B + 1, dtype=jnp.int32)
+    feasible = (sd <= free + cum_freed) & (k_grid <= n_cand)
+    k = jnp.where(jnp.any(feasible),
+                  jnp.argmax(feasible).astype(jnp.int32) + 1, 0)
+    need_preempt = (run_count == 0) & jnp.any(eligible)
+    k = jnp.where(need_preempt, k, 0)
+    victims = vcand & (rank_desc < k)
+    # infeasible even after evicting every candidate (k == 0): stall the
+    # whole turn — finishing slots release pages at harvest and the next
+    # turn's plan re-evaluates (the construction-time minimum-pool check
+    # guarantees this converges)
+    run = jnp.where(need_preempt & (k > 0), survivor, run)
+    return run, victims
+
+
+def grow_pool(cache, new_pages: int):
+    """Host-side pool growth (``pool_growth="double"``): extend the page
+    pool of every layer to ``new_pages`` pages, appending zeroed FREE
+    pages (refcount 0). Values and int8 scale pools grow together — both
+    are per-page tensors with the pool axis at position 1 of the stacked
+    ``(n_layers, n_pages, ...)`` leaves — and block tables / positions
+    are untouched, so every existing mapping stays valid. Runs BETWEEN
+    macro-steps: the jitted turn program re-traces for the new pool
+    shape (the compile cache is keyed on capacity), which is the
+    deliberate cost of growing instead of preempting."""
+    P = cache.refcount.shape[0]
+    extra = int(new_pages) - P
+    if extra <= 0:
+        return cache
+
+    def pad_pages(leaf):
+        shape = list(leaf.shape)
+        shape[1] = extra
+        return jnp.concatenate(
+            [leaf, jnp.zeros(shape, leaf.dtype)], axis=1)
+
+    return cache._replace(
+        kv=jax.tree.map(pad_pages, cache.kv),
+        refcount=jnp.concatenate(
+            [cache.refcount,
+             jnp.zeros((extra,), cache.refcount.dtype)]),
+    )
 
 
 def dropped_tokens(cache, page_size: int):

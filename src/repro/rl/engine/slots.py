@@ -82,6 +82,15 @@ class SlotCarry(NamedTuple):
     # fork_prefix``). The engine holds one reference on each so the run
     # survives all its episode owners.
     prefix_pages: Any = None   # (shared_pages,) int32 pool page indices
+    # preemption bookkeeping (None unless on_exhaust="preempt"): a slot
+    # evicted by the memory-pressure governor releases its pages, its
+    # episode id enters the ``requeue`` bitmap, and the admission planner
+    # (``admission_plan``) re-launches it from scratch once the pool has
+    # headroom again — every preempted episode is eventually re-run, so
+    # an undersized pool degrades to *slower*, never to *lost context*.
+    preempted: Any = None      # () int32 cumulative slot preemptions
+    requeue: Any = None        # (N,) bool — episodes awaiting re-admission
+    requeue_peak: Any = None   # () int32 peak requeue depth
 
 
 def init_store(n_episodes: int, max_context: int,
@@ -143,3 +152,47 @@ def refill_plan(finished, launched, n_episodes: int):
     refill = finished & (new_ids < n_episodes)
     launched = launched + jnp.sum(refill.astype(jnp.int32))
     return refill, jnp.where(refill, new_ids, 0), launched
+
+
+def admission_plan(free_slots, requeue, launched, n_episodes: int, quota):
+    """Watermark-gated refill for ``on_exhaust="preempt"``.
+
+    Like ``refill_plan``, but (a) slots freed by preemption or earlier
+    admission throttling are candidates too (``free_slots``, not just
+    this turn's finished set), (b) *re-queued* episodes — preempted
+    earlier, awaiting a restart — are admitted FIRST, in ascending
+    episode-id order, before any fresh id is launched, and (c) at most
+    ``quota`` episodes are admitted this turn (the pressure governor
+    computes the quota from the pool's free-page headroom above the
+    low-watermark, so admission never re-creates the exhaustion that
+    caused the preemption).
+
+    free_slots: (B,) bool; requeue: (N,) bool; quota: () int32.
+    Returns ``(admit, new_ids, launched', requeue')``. ``launched`` only
+    advances for fresh ids — a re-admitted episode was already counted
+    at its first launch, preserving the started == returned invariant.
+    """
+    free_slots = jnp.asarray(free_slots)
+    requeue = jnp.asarray(requeue)
+    quota = jnp.asarray(quota, jnp.int32)
+    B = free_slots.shape[0]
+    N = requeue.shape[0]
+    rank = jnp.cumsum(free_slots.astype(jnp.int32)) - 1      # admission rank
+    n_rq = jnp.sum(requeue.astype(jnp.int32))
+    # rank-match requeued ids: the r-th admission takes the r-th (lowest)
+    # requeued episode id — same cumsum scatter as the page allocator
+    rq_rank = jnp.cumsum(requeue.astype(jnp.int32)) - 1      # (N,)
+    slot_of = jnp.where(requeue & (rq_rank < B), rq_rank, B)
+    rank_to_eid = jnp.full((B,), N, jnp.int32).at[slot_of].set(
+        jnp.arange(N, dtype=jnp.int32), mode="drop")
+    from_rq = free_slots & (rank < n_rq)
+    fresh_id = launched + (rank - n_rq)                      # ranks >= n_rq
+    eid = jnp.where(from_rq, rank_to_eid[jnp.clip(rank, 0, B - 1)],
+                    fresh_id).astype(jnp.int32)
+    have = free_slots & (from_rq
+                         | ((rank >= n_rq) & (fresh_id < n_episodes)))
+    admit = have & (rank < quota)
+    launched = launched + jnp.sum((admit & ~from_rq).astype(jnp.int32))
+    requeue = requeue.at[jnp.where(admit & from_rq, eid, N)].set(
+        False, mode="drop")
+    return admit, jnp.where(admit, eid, 0), launched, requeue

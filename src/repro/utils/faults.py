@@ -1,0 +1,120 @@
+"""Deterministic fault injection for robustness testing.
+
+The EARL pipeline degrades gracefully under two failure families —
+resource pressure (KV page-pool exhaustion) and stage crashes (a rollout
+/ dispatch / update worker raising mid-run) — and both recovery paths
+(`on_exhaust="preempt"`, `PipelineSchedule` retry + checkpoint resume)
+must be testable in tier-1 without flaky timing games. ``FaultInjector``
+makes the failures *deterministic*: a spec names the stage site and the
+step index at which an exception fires, and ``pool_pressure`` shrinks
+the paged pool to a fraction of its exhaustion-free size so the
+preemption governor actually engages.
+
+Spec grammar (one string per fault)::
+
+    "<site>@<step>"            fire once at that pipeline step
+    "<site>@<step>*<times>"    fire on <times> consecutive hits
+
+Sites are the stage names the trainer / scheduler check at their
+boundaries: ``rollout``, ``dispatch``, ``update``. An ``update`` fault
+under ``pipeline="async"`` fires inside the worker thread — the injected
+async-worker crash of the recovery tests.
+
+Every firing raises ``FaultInjected`` (a ``RuntimeError``) and is
+counted, so a test can assert both that the fault fired and that the
+schedule recovered from it. The injector is plain host-side python — it
+never enters a compiled program.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+
+class FaultInjected(RuntimeError):
+    """Raised by ``FaultInjector.check`` at an armed (site, step)."""
+
+
+@dataclass
+class FaultSpec:
+    site: str          # "rollout" | "dispatch" | "update"
+    step: int          # pipeline step index the fault arms at
+    times: int = 1     # consecutive hits that raise (then the spec is spent)
+    fired: int = 0     # firings so far (mutated by check)
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultSpec":
+        try:
+            site, rest = text.split("@", 1)
+            times = 1
+            if "*" in rest:
+                rest, times_s = rest.split("*", 1)
+                times = int(times_s)
+            site = site.strip()
+            if not site:
+                raise ValueError("empty site")
+            return cls(site=site, step=int(rest), times=times)
+        except (ValueError, AttributeError):
+            raise ValueError(
+                f"bad fault spec {text!r} (expected 'site@step' or "
+                f"'site@step*times', e.g. 'update@3' or 'rollout@1*2')"
+            ) from None
+
+
+KNOWN_SITES = ("rollout", "dispatch", "update")
+
+
+@dataclass
+class FaultInjector:
+    """Holds armed fault specs + a pool-pressure knob.
+
+    ``check(site, step)`` is called by the trainer / scheduler at each
+    stage boundary; it raises ``FaultInjected`` when a matching spec is
+    armed and not yet spent. ``pool_pressure`` (0 disables) asks
+    ``EarlTrainer`` to undersize the paged pool to that fraction of the
+    exhaustion-free provisioning (``undersize_pool``).
+    """
+
+    specs: List[FaultSpec] = field(default_factory=list)
+    pool_pressure: float = 0.0
+    counts: Dict[str, int] = field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, exprs: Union[str, Sequence[str], None],
+              pool_pressure: float = 0.0) -> "FaultInjector":
+        if exprs is None:
+            exprs = []
+        if isinstance(exprs, str):
+            exprs = [exprs]
+        specs = [FaultSpec.parse(e) for e in exprs]
+        for s in specs:
+            if s.site not in KNOWN_SITES:
+                raise ValueError(f"unknown fault site {s.site!r} "
+                                 f"(known: {', '.join(KNOWN_SITES)})")
+        return cls(specs=specs, pool_pressure=float(pool_pressure))
+
+    def check(self, site: str, step: int) -> None:
+        """Raise ``FaultInjected`` if a spec is armed at (site, step)."""
+        for s in self.specs:
+            if s.site == site and s.step == step and s.fired < s.times:
+                s.fired += 1
+                self.counts[site] = self.counts.get(site, 0) + 1
+                raise FaultInjected(
+                    f"injected {site} fault at step {step} "
+                    f"(firing {s.fired}/{s.times})")
+
+    def fired(self, site: Optional[str] = None) -> int:
+        """Total firings (optionally for one site) — test assertions."""
+        if site is None:
+            return sum(self.counts.values())
+        return self.counts.get(site, 0)
+
+
+def undersize_pool(full_pages: int, fraction: float,
+                   floor: int = 1) -> int:
+    """Pool size at ``fraction`` of the exhaustion-free provisioning,
+    clamped to at least ``floor`` pages (the engine's own minimum-viable
+    bound for ``on_exhaust="preempt"`` — pass it so the injected
+    pressure stays *recoverable* pressure, not a construction error)."""
+    return max(int(floor), int(math.ceil(float(fraction) * full_pages)))

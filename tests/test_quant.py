@@ -231,6 +231,70 @@ def test_fork_shares_quantized_pages_bitwise(model_and_params, rng):
                                   np.asarray(logits[1]))
 
 
+def test_scrub_zeroes_int8_values_and_scales_after_preempt_release(rng):
+    """Exhaustion-recovery scrub on a quantized pool: a page that was
+    prefix-shared, then privatized by CoW, then released by preemption
+    still holds int8 residue (values AND nonzero scales). When the
+    allocator re-maps it mid-row the scrub pass zeroes BOTH pools, so
+    the recycled page behaves bitwise like a hand-zeroed page — every
+    unwritten offset dequantizes to exactly 0.0 and the fresh write
+    round-trips through its own new scale."""
+    from repro.models import layers as L
+    H = KV = 2
+    hd, D, P, ps, B = 8, 16, 6, 4, 2
+    keys = jax.random.split(rng, 8)
+    p = {"wq": jax.random.normal(keys[0], (D, H * hd)) * 0.1,
+         "wk": jax.random.normal(keys[1], (D, KV * hd)) * 0.1,
+         "wv": jax.random.normal(keys[2], (D, KV * hd)) * 0.1,
+         "wo": jax.random.normal(keys[3], (H * hd, D)) * 0.1}
+    x = jax.random.normal(keys[4], (B, 1, D))
+    qk, sk = paging.quantize_kv(jax.random.normal(keys[5], (P, ps, KV, hd)))
+    qv, sv = paging.quantize_kv(jax.random.normal(keys[6], (P, ps, KV, hd)))
+    kv = L.KVEntry(qk, qv, sk, sv)
+    # page 1 was shared; row 0 privatized it into page 4 (CoW copy of
+    # values + scales), wrote a token — then the pressure governor
+    # preempted row 0 and released page 4. The release only unmaps: the
+    # int8 residue stays in the pool.
+    _, kv_dirty = L.paged_decode_attention(
+        p, x, kv, jnp.array([[4, -1], [2, -1]], jnp.int32),
+        jnp.array([2, 1], jnp.int32),
+        wpage=jnp.array([4, 2], jnp.int32),
+        woff=jnp.array([2, 1], jnp.int32),
+        cow_src=jnp.array([1, P], jnp.int32),
+        cow_dst=jnp.array([4, P], jnp.int32),
+        n_heads=H, n_kv_heads=KV, head_dim=hd, rope_theta=1e4)
+    assert np.abs(np.asarray(kv_dirty.k_scale[4])).sum() > 0   # residue
+    # the released page is re-mapped MID-ROW to row 1 (the transient-
+    # exhaustion recovery path): scrub must zero values AND scales
+    # before the write lands
+    bt2 = jnp.array([[0, -1], [2, 4]], jnp.int32)
+    pos2 = jnp.array([0, ps], jnp.int32)     # row 1 writes (page 4, off 0)
+    wpage = jnp.array([0, 4], jnp.int32)
+    woff = jnp.array([0, 0], jnp.int32)
+    out_s, kv_s = L.paged_decode_attention(
+        p, x, kv_dirty, bt2, pos2, wpage=wpage, woff=woff,
+        scrub=jnp.array([P, 4], jnp.int32),  # sentinel P = no scrub
+        n_heads=H, n_kv_heads=KV, head_dim=hd, rope_theta=1e4)
+    # oracle: hand-zero page 4 (values + scales) up front, no scrub arg
+    kv_clean = L.KVEntry(
+        kv_dirty.k.at[4].set(0), kv_dirty.v.at[4].set(0),
+        kv_dirty.k_scale.at[4].set(0.0), kv_dirty.v_scale.at[4].set(0.0))
+    out_o, kv_o = L.paged_decode_attention(
+        p, x, kv_clean, bt2, pos2, wpage=wpage, woff=woff,
+        n_heads=H, n_kv_heads=KV, head_dim=hd, rope_theta=1e4)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(out_o))
+    for got, exp in zip(kv_s, kv_o):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    # unwritten offsets of the recycled page read exactly 0 — zero scale
+    # kills any int8 bit pattern the values slots might still hold
+    assert (np.asarray(kv_s.k[4][1:]) == 0).all()
+    assert (np.asarray(kv_s.k_scale[4][1:]) == 0).all()
+    assert (np.asarray(kv_s.v_scale[4][1:]) == 0).all()
+    np.testing.assert_array_equal(
+        np.asarray(paging.dequantize_kv(kv_s.k[4], kv_s.k_scale[4]))[1:],
+        0.0)
+
+
 # ---------------------------------------------------------------------------
 # Engine-level parity across kv_dtypes
 # ---------------------------------------------------------------------------

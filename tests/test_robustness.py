@@ -1,0 +1,463 @@
+"""Graceful degradation under KV-pool pressure (PR 8): the in-graph
+preemption governor (stall -> preempt -> watermark-gated re-admission),
+host-side pool auto-grow, checkpointed auto-resume of the stage
+pipeline, and the deterministic fault-injection harness.
+
+The acceptance bar under test: a pool at HALF the exhaustion-free
+provisioning with ``on_exhaust="preempt"`` finishes every episode with
+zero dropped KV writes and greedy trajectories BIT-IDENTICAL to a
+right-sized run (episode-keyed rng makes trajectories a pure function of
+(params, episode id), invariant to preemption scheduling); an injected
+async-worker crash restarts from the latest checkpoint and matches the
+uninterrupted run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import latest_step
+from repro.core.stages import EarlTrainer
+from repro.models import paging as mpaging
+from repro.optim.adamw import adamw
+from repro.rl.engine import CompiledRolloutEngine
+from repro.rl.engine import paging as epaging
+from repro.rl.engine import slots
+from repro.rl.envs import make_env
+from repro.utils.faults import (FaultInjected, FaultInjector, FaultSpec,
+                                undersize_pool)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs.base import get_smoke_config
+    from repro.models.registry import build_model
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection harness (utils/faults.py)
+# ---------------------------------------------------------------------------
+
+class TestFaultInjector:
+    def test_parse_grammar(self):
+        s = FaultSpec.parse("update@3")
+        assert (s.site, s.step, s.times) == ("update", 3, 1)
+        s = FaultSpec.parse("rollout@1*2")
+        assert (s.site, s.step, s.times) == ("rollout", 1, 2)
+
+    @pytest.mark.parametrize("bad", ["update", "update@", "@3", "u@x",
+                                     "update@1*y"])
+    def test_parse_rejects_bad_grammar(self, bad):
+        with pytest.raises(ValueError, match="bad fault spec"):
+            FaultSpec.parse(bad)
+
+    def test_parse_rejects_unknown_site(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            FaultInjector.parse(["frobnicate@1"])
+
+    def test_check_fires_exactly_at_site_step_times(self):
+        inj = FaultInjector.parse(["update@2*2", "rollout@0"])
+        inj.check("update", 0)                       # wrong step: silent
+        inj.check("dispatch", 2)                     # wrong site: silent
+        with pytest.raises(FaultInjected):
+            inj.check("rollout", 0)
+        with pytest.raises(FaultInjected):
+            inj.check("update", 2)
+        with pytest.raises(FaultInjected):
+            inj.check("update", 2)                   # times=2: fires twice
+        inj.check("update", 2)                       # spent: silent
+        assert inj.fired() == 3
+        assert inj.fired("update") == 2 and inj.fired("rollout") == 1
+
+    def test_undersize_pool(self):
+        assert undersize_pool(48, 0.5) == 24
+        assert undersize_pool(45, 0.5) == 23         # ceil
+        assert undersize_pool(45, 0.1, floor=12) == 12   # clamped to floor
+
+
+# ---------------------------------------------------------------------------
+# Pressure governor (engine/paging.pressure_plan)
+# ---------------------------------------------------------------------------
+
+def _plan(refcount, bt, eligible, pos, demand):
+    run, victims = epaging.pressure_plan(
+        jnp.asarray(refcount, jnp.int32), jnp.asarray(bt, jnp.int32),
+        jnp.asarray(eligible), jnp.asarray(pos, jnp.int32),
+        jnp.asarray(demand, jnp.int32))
+    return np.asarray(run), np.asarray(victims)
+
+
+class TestPressurePlan:
+    def test_everyone_runs_when_pool_has_room(self):
+        run, victims = _plan([0, 0, 0, 0], [[-1], [-1]],
+                             [True, True], [5, 3], [1, 1])
+        assert run.all() and not victims.any()
+
+    def test_stall_before_preempt(self):
+        """One free page, two demanders: the shortest-context row runs,
+        the other STALLS (keeps its pages) — no preemption."""
+        run, victims = _plan([1, 1, 0], [[0, -1], [1, -1]],
+                             [True, True], [5, 3], [1, 1])
+        assert run.tolist() == [False, True]
+        assert not victims.any()
+
+    def test_zero_demand_rows_always_run(self):
+        """A row that cannot allocate (demand 0) runs even with an empty
+        pool — it neither needs pages nor blocks anyone."""
+        run, victims = _plan([1, 1], [[0, -1], [1, -1]],
+                             [True, True], [9, 2], [0, 1])
+        assert run.tolist() == [True, False]         # demander stalls
+        assert not victims.any()
+
+    def test_preempt_longest_context_when_stuck(self):
+        """Empty pool, both demand: the longest-context row is evicted,
+        the cheapest (survivor) runs the same turn."""
+        run, victims = _plan([1, 1], [[0, -1], [1, -1]],
+                             [True, True], [8, 2], [1, 1])
+        assert victims.tolist() == [True, False]
+        assert run.tolist() == [False, True]
+
+    def test_survivor_is_never_a_victim(self):
+        run, victims = _plan([1, 1, 1], [[0], [1], [2]],
+                             [True, True, True], [9, 1, 7], [1, 1, 1])
+        assert not victims[1]                        # shortest ctx survives
+        assert victims[0] and not victims[2]         # smallest feasible set
+        assert run.tolist() == [False, True, False]
+
+    def test_shared_pages_free_nothing_so_stall_instead(self):
+        """A victim candidate whose pages are all prefix-shared
+        (refcount 2) frees nothing; with no feasible victim set the plan
+        stalls the whole turn rather than evicting pointlessly."""
+        run, victims = _plan([2, 2], [[0, 1], [0, 1]],
+                             [True, True], [8, 2], [1, 1])
+        assert not victims.any() and not run.any()
+
+
+# ---------------------------------------------------------------------------
+# Watermark admission (engine/slots.admission_plan)
+# ---------------------------------------------------------------------------
+
+def _admit(free_slots, requeue, launched, n_episodes, quota):
+    a, ids, launched2, rq2 = slots.admission_plan(
+        jnp.asarray(free_slots), jnp.asarray(requeue),
+        jnp.asarray(launched, jnp.int32), n_episodes,
+        jnp.asarray(quota, jnp.int32))
+    return (np.asarray(a), np.asarray(ids), int(launched2),
+            np.asarray(rq2))
+
+
+class TestAdmissionPlan:
+    def test_requeued_episodes_admitted_first_ascending(self):
+        rq = [False, False, True, False, True, False]    # eids {2, 4}
+        admit, ids, launched, rq2 = _admit(
+            [True, False, True, False], rq, 6, 6, quota=2)
+        assert admit.tolist() == [True, False, True, False]
+        assert ids[0] == 2 and ids[2] == 4               # ascending eid
+        assert launched == 6                              # no fresh launch
+        assert not rq2.any()                              # queue drained
+
+    def test_quota_gates_admission_and_keeps_queue(self):
+        rq = [False, False, True, False, True, False]
+        admit, ids, launched, rq2 = _admit(
+            [True, False, True, False], rq, 6, 6, quota=1)
+        assert admit.tolist() == [True, False, False, False]
+        assert ids[0] == 2
+        assert rq2.tolist() == [False, False, False, False, True, False]
+
+    def test_fresh_ids_advance_launched(self):
+        admit, ids, launched, _ = _admit(
+            [True, True, False, False], [False] * 6, 3, 6, quota=5)
+        assert admit.tolist() == [True, True, False, False]
+        assert ids[0] == 3 and ids[1] == 4
+        assert launched == 5
+
+    def test_mixed_requeue_then_fresh(self):
+        rq = [False] * 5 + [True] + [False] * 2          # eid 5
+        admit, ids, launched, rq2 = _admit(
+            [True, True, True, False], rq, 2, 8, quota=3)
+        assert admit.tolist() == [True, True, True, False]
+        assert ids[0] == 5                                # requeued first
+        assert ids[1] == 2 and ids[2] == 3                # then fresh
+        assert launched == 4                              # only fresh count
+        assert not rq2.any()
+
+    def test_no_fresh_launch_past_n_episodes(self):
+        admit, ids, launched, _ = _admit(
+            [True, True, False, False], [False] * 4, 3, 4, quota=5)
+        assert admit.tolist() == [True, False, False, False]
+        assert ids[0] == 3 and launched == 4
+
+
+# ---------------------------------------------------------------------------
+# Pool auto-grow (engine/paging.grow_pool)
+# ---------------------------------------------------------------------------
+
+def test_grow_pool_preserves_mappings_and_adds_free_pages(
+        model_and_params):
+    model, params = model_and_params
+    cache = model.init_cache(2, 32, layout="paged", page_size=8)
+    _, cache = model.prefill(
+        params, jnp.ones((2, 12), jnp.int32), cache)
+    P = cache.refcount.shape[0]
+    used = int(mpaging.pages_in_use(cache.refcount))
+    assert used > 0
+    grown = epaging.grow_pool(cache, 2 * P)
+    assert grown.refcount.shape == (2 * P,)
+    np.testing.assert_array_equal(np.asarray(grown.refcount[:P]),
+                                  np.asarray(cache.refcount))
+    assert (np.asarray(grown.refcount[P:]) == 0).all()   # new pages FREE
+    np.testing.assert_array_equal(np.asarray(grown.block_table),
+                                  np.asarray(cache.block_table))
+    for old, new in zip(jax.tree.leaves(cache.kv),
+                        jax.tree.leaves(grown.kv)):
+        assert new.shape[1] == 2 * P
+        np.testing.assert_array_equal(np.asarray(new[:, :P]),
+                                      np.asarray(old))
+        assert (np.asarray(new[:, P:], np.float32) == 0).all()
+    # shrinking / same size is a no-op
+    assert epaging.grow_pool(cache, P) is cache
+
+
+# ---------------------------------------------------------------------------
+# Engine: preemption acceptance bar + raise diagnostics + auto-grow
+# ---------------------------------------------------------------------------
+
+PRESSURE_KW = dict(max_turns=3, max_turn_tokens=4, max_context=96,
+                   temperature=0.0, cache_layout="paged", page_size=8,
+                   share_prefix=True)
+
+
+def _pressure_env(name):
+    return make_env(name, prompt_len=24) if name == "bandit" \
+        else make_env(name)
+
+
+@pytest.mark.parametrize("env_name", ["tictactoe", "bandit"])
+def test_preempt_half_pool_zero_drops_bit_identical(model_and_params,
+                                                    env_name):
+    """THE acceptance criterion: at 50% of pool_pages_needed_shared with
+    on_exhaust="preempt", every episode completes, no KV write is ever
+    dropped, and greedy trajectories are bit-identical to a right-sized
+    preempt-mode run — preemption only reorders work, it never changes
+    it (episode-keyed rng makes each trajectory a pure function of
+    (params, episode id), invariant to pool size and scheduling)."""
+    model, params = model_and_params
+    env = _pressure_env(env_name)
+    rng = jax.random.PRNGKey(0)
+    ref = CompiledRolloutEngine(model, env, **PRESSURE_KW,
+                                on_exhaust="preempt")
+    full = mpaging.pool_pages_needed_shared(4, 96, ref.shared_len, 8)
+    half = undersize_pool(full, 0.5, ref.min_pool_pages(4))
+    assert half < full
+    pre = CompiledRolloutEngine(model, env, **PRESSURE_KW,
+                                on_exhaust="preempt", cache_pages=half)
+    exp_r, s_r = ref.run(params, rng, 4, n_episodes=8)
+    exp_p, s_p = pre.run(params, rng, 4, n_episodes=8)
+    for s in (s_r, s_p):
+        assert int(s.kv_dropped_writes) == 0
+        assert int(s.episodes_returned) == 8
+    assert s_p.requeue_depth >= 0 and s_p.preemptions >= 0
+    np.testing.assert_array_equal(np.asarray(exp_r.tokens),
+                                  np.asarray(exp_p.tokens))
+    np.testing.assert_array_equal(np.asarray(exp_r.gen_mask),
+                                  np.asarray(exp_p.gen_mask))
+    np.testing.assert_array_equal(np.asarray(exp_r.rewards),
+                                  np.asarray(exp_p.rewards))
+
+
+def test_preempt_minimum_pool_still_drains(model_and_params):
+    """At min_pool_pages exactly — the governor's guaranteed floor — the
+    rollout still finishes everything, with actual preemptions."""
+    model, params = model_and_params
+    env = make_env("tictactoe")
+    eng = CompiledRolloutEngine(model, env, **PRESSURE_KW,
+                                on_exhaust="preempt")
+    eng.cache_pages = eng.min_pool_pages(4)
+    _, s = eng.run(params, jax.random.PRNGKey(0), 4, n_episodes=8)
+    assert int(s.kv_dropped_writes) == 0
+    assert int(s.episodes_returned) == 8
+    assert s.preemptions > 0 and s.requeue_depth > 0
+
+
+def test_preempt_rejects_pool_below_minimum(model_and_params):
+    model, params = model_and_params
+    eng = CompiledRolloutEngine(model, make_env("tictactoe"),
+                                **PRESSURE_KW, on_exhaust="preempt")
+    eng.cache_pages = eng.min_pool_pages(4) - 1
+    with pytest.raises(ValueError, match="minimum viable pool"):
+        eng.run(params, jax.random.PRNGKey(0), 4, n_episodes=8)
+
+
+def test_preempt_requires_paged_layout(model_and_params):
+    model, _ = model_and_params
+    with pytest.raises(ValueError, match="preempt"):
+        CompiledRolloutEngine(model, make_env("bandit"), max_turns=1,
+                              max_turn_tokens=2, max_context=32,
+                              on_exhaust="preempt")
+
+
+def test_on_exhaust_raise_reports_per_slot_shortfall(model_and_params):
+    """Satellite: the raise-mode error names the exact per-slot token
+    shortfall (engine/paging.dropped_tokens) and a concrete fix."""
+    model, params = model_and_params
+    env = make_env("tictactoe")
+    eng = CompiledRolloutEngine(model, env, max_turns=3,
+                                max_turn_tokens=4, max_context=96,
+                                temperature=0.0, cache_layout="paged",
+                                page_size=8, cache_pages=4,
+                                on_exhaust="raise")
+    with pytest.raises(RuntimeError) as ei:
+        eng.run(params, jax.random.PRNGKey(0), 4, n_episodes=8)
+    msg = str(ei.value)
+    assert "per-slot shortfall" in msg and "slot " in msg
+    assert "grow cache_pages by at least" in msg
+    assert "preempt" in msg                          # names the alternative
+
+
+def test_pool_growth_doubles_under_pressure(model_and_params):
+    """pool_growth="double": an undersized pool grows between
+    macro-steps instead of preempting forever; telemetry records it."""
+    model, params = model_and_params
+    env = make_env("tictactoe")
+    eng = CompiledRolloutEngine(model, env, **PRESSURE_KW,
+                                on_exhaust="preempt",
+                                pool_growth="double")
+    eng.cache_pages = eng.min_pool_pages(4)
+    _, s = eng.run(params, jax.random.PRNGKey(0), 4, n_episodes=8)
+    assert s.pool_grows >= 1
+    assert int(s.kv_dropped_writes) == 0
+    assert int(s.episodes_returned) == 8
+
+
+def test_pool_growth_requires_paged_layout(model_and_params):
+    model, _ = model_and_params
+    with pytest.raises(ValueError, match="pool_growth requires"):
+        CompiledRolloutEngine(model, make_env("bandit"), max_turns=1,
+                              max_turn_tokens=2, max_context=32,
+                              pool_growth="double")
+
+
+# ---------------------------------------------------------------------------
+# Trainer / pipeline: retry, checkpoint auto-resume, crash recovery
+# ---------------------------------------------------------------------------
+
+def _trainer(model, env_name="bandit", *, pipeline="sync", lag=0, **kw):
+    base = dict(batch_size=4, max_turns=1, max_turn_tokens=2,
+                max_context=32, seed=0)
+    base.update(kw)
+    return EarlTrainer(model=model, env=make_env(env_name),
+                       optimizer=adamw(1e-3, weight_decay=0.0),
+                       rollout_backend="compiled", pipeline=pipeline,
+                       max_policy_lag=lag, **base)
+
+
+@pytest.fixture(scope="module")
+def model(model_and_params):
+    return model_and_params[0]
+
+
+class TestFaultRecovery:
+    def test_sync_retry_recovers_from_injected_fault(self, model):
+        faults = FaultInjector.parse(["rollout@1"])
+        tr = _trainer(model, faults=faults, max_retries=1,
+                      retry_backoff_s=0.0)
+        _, _, hist = tr.train(3)
+        assert faults.fired("rollout") == 1          # it DID fire
+        assert [r.step for r in hist] == [0, 1, 2]   # and was retried
+
+    def test_sync_retries_exhausted_propagates(self, model):
+        faults = FaultInjector.parse(["update@1*3"])
+        tr = _trainer(model, faults=faults, max_retries=1,
+                      retry_backoff_s=0.0)
+        with pytest.raises(FaultInjected):
+            tr.train(3)
+
+    def test_checkpoint_and_resume_sync(self, model, tmp_path):
+        d = str(tmp_path / "ck")
+        t1 = _trainer(model, checkpoint_dir=d, checkpoint_every=1)
+        t1.train(2)
+        assert latest_step(d) == 2
+        t2 = _trainer(model, checkpoint_dir=d, checkpoint_every=1,
+                      resume=True)
+        _, _, hist = t2.train(4)
+        assert [r.step for r in hist] == [2, 3]      # steps 0-1 skipped
+        assert latest_step(d) == 4
+
+    def test_resume_past_end_is_a_noop(self, model, tmp_path):
+        d = str(tmp_path / "ck")
+        t1 = _trainer(model, checkpoint_dir=d, checkpoint_every=1)
+        t1.train(2)
+        t2 = _trainer(model, checkpoint_dir=d, resume=True)
+        _, _, hist = t2.train(2)
+        assert hist == []
+
+    def test_async_crash_restarts_from_checkpoint(self, model, tmp_path):
+        """Acceptance: an injected async-worker crash at step k resumes
+        from the latest checkpoint and matches the uninterrupted run's
+        step count — and at lag 0 the final params bit-for-bit."""
+        d = str(tmp_path / "ck")
+        faults = FaultInjector.parse(["update@1"])
+        tr = _trainer(model, pipeline="async", lag=0, faults=faults,
+                      max_retries=1, retry_backoff_s=0.0,
+                      checkpoint_dir=d, checkpoint_every=1)
+        p_f, _, hist = tr.train(4)
+        assert faults.fired("update") == 1
+        assert [r.step for r in hist] == [0, 1, 2, 3]
+        assert latest_step(d) == 4
+        clean = _trainer(model, pipeline="async", lag=0)
+        p_c, _, hist_c = clean.train(4)
+        assert len(hist) == len(hist_c)
+        for a, b in zip(jax.tree.leaves(p_f), jax.tree.leaves(p_c)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_async_crash_with_lag_recovers_step_count(self, model,
+                                                      tmp_path):
+        d = str(tmp_path / "ck")
+        faults = FaultInjector.parse(["update@2"])
+        tr = _trainer(model, pipeline="async", lag=1, faults=faults,
+                      max_retries=1, retry_backoff_s=0.0,
+                      checkpoint_dir=d, checkpoint_every=1,
+                      is_rho_max=2.0)
+        _, _, hist = tr.train(5)
+        assert faults.fired("update") == 1
+        assert [r.step for r in hist] == [0, 1, 2, 3, 4]
+        assert latest_step(d) == 5
+
+    def test_async_crash_without_checkpoint_propagates(self, model):
+        """No checkpoint to restart from: the worker's exception surfaces
+        promptly and the executor tears down cleanly (no hang, no
+        dangling future warnings)."""
+        faults = FaultInjector.parse(["update@0"])
+        tr = _trainer(model, pipeline="async", lag=1, faults=faults,
+                      max_retries=1, retry_backoff_s=0.0)
+        with pytest.raises(FaultInjected):
+            tr.train(3)
+
+
+class TestPoolPressureInjection:
+    def test_trainer_undersizes_pool_and_preempt_absorbs_it(self, model):
+        """--inject-pool-pressure end-to-end: the trainer shrinks the
+        paged pool to the injected fraction (never below the governor's
+        floor) and a preempt-mode run still drops nothing."""
+        faults = FaultInjector.parse([], pool_pressure=0.5)
+        tr = _trainer(model, cache_layout="paged", page_size=8,
+                      on_exhaust="preempt", faults=faults)
+        full = mpaging.pool_pages_needed(4, 32, 8)
+        assert tr.rollout_stage.engine.cache_pages < full
+        assert tr.rollout_stage.engine.cache_pages >= \
+            tr.rollout_stage.engine.min_pool_pages(4)
+        _, _, hist = tr.train(2)
+        assert all(r.kv_dropped_writes == 0 for r in hist)
+        assert all(hasattr(r, f) for r in hist
+                   for f in ("preemptions", "requeue_depth",
+                             "pool_grows"))
+
+    def test_pool_pressure_requires_paged_compiled(self, model):
+        faults = FaultInjector.parse([], pool_pressure=0.5)
+        with pytest.raises(ValueError, match="pool_pressure"):
+            _trainer(model, faults=faults)           # dense layout
