@@ -33,9 +33,22 @@ Four regimes (the paper's Rollout-stage cost axis, Fig. 2 ① / Tab. 1):
    writes) vs half-sized under ``"preempt"`` (zero drops; the governor
    stalls/evicts/re-admits and the price appears as tokens/s).
 
+5. **Speculative regime** (``speculation="self"`` vs ``"off"``, equal
+   pool memory) — a deep model (8 layers) with a 1-layer self-draft on
+   a generation-heavy bandit workload. The draft is made *exact* by
+   zeroing the tail layers' output projections (their residual
+   contribution becomes exactly 0, so the 1-layer prefix IS the full
+   model): this pins the α=1 acceptance upper bound — sequential
+   full-model steps per committed token drop from L to (K·D + L)/K
+   (= 3 vs 8 at K=4, D=1, L=8). A random-init draft accepts ~nothing
+   (speculation is then pure overhead — the telemetry shows it); a
+   trained policy sits between, which is why ``mean_accept`` is the
+   column to watch, not the α=1 speedup itself.
+
     PYTHONPATH=src python -m benchmarks.bench_rollout
         [--batches 2,8] [--max-turns 3] [--repeats 3]
         [--churn-mult 4] [--page-size 8] [--prompt-len 40]
+        [--spec-k 4]
 
 The churn and shared regimes carry a ``kv_dtype`` column: paged pools
 run at bf16 (default), fp32 and int8 element types. ``cache_kib`` is
@@ -53,6 +66,9 @@ CSV (shared): share_prefix,kv_dtype,env,batch,episodes,gen_tokens,
 CSV (pressure): policy,pool_pages,env,batch,episodes,gen_tokens,
              seconds,tokens_per_s,kv_dropped_writes,preemptions,
              requeue_depth
+CSV (spec):  speculation,spec_k,draft_layers,env,batch,episodes,
+             gen_tokens,seconds,tokens_per_s,mean_accept,
+             spec_proposed,spec_accepted
 
 ``main`` returns the rows as a dict so ``benchmarks/run.py`` can write
 ``BENCH_rollout.json`` for cross-PR perf tracking.
@@ -338,6 +354,90 @@ def _pressure_section(args, model, params):
     return rows
 
 
+def _spec_section(args, model):
+    """Speculative regime: tokens/s of ``speculation="self"`` vs
+    ``"off"`` at EQUAL pool memory, on a deep (8-layer) variant of the
+    smoke arch with a 1-layer self-draft and a generation-heavy
+    single-turn bandit workload. The tail layers' output projections
+    (``attn.wo`` / ``mlp.w_down`` for layers >= draft_layers) are
+    zeroed, which makes their residual contribution exactly 0 — the
+    truncated-layer draft then IS the full model, so every proposal is
+    accepted (α = 1) and the bench reads the acceptance machinery's
+    upper bound: (spec_k·draft_layers + n_layers)/spec_k sequential
+    layer reads per committed token instead of n_layers. The committed
+    trajectories are bit-identical either way (tests pin it); only
+    seconds may differ."""
+    import dataclasses
+
+    from repro.models import paging
+    from repro.models.registry import build_model
+    from repro.rl.engine import CompiledRolloutEngine
+    from repro.rl.envs import make_env
+
+    env = make_env("bandit")
+    mtt, ps, K, D = 16, args.page_size, args.spec_k, 1
+    # deep + wide enough that per-layer compute (the stand-in for HBM
+    # weight streaming on a real accelerator) dominates per-call
+    # dispatch overhead — the regime speculation actually targets
+    cfg = dataclasses.replace(model.cfg, n_layers=8, d_model=256,
+                              n_heads=8, n_kv_heads=2, d_ff=512)
+    deep = build_model(cfg)
+    params = deep.init(jax.random.PRNGKey(0))
+    params["layers"]["attn"]["wo"] = \
+        params["layers"]["attn"]["wo"].at[D:].set(0.0)
+    params["layers"]["mlp"]["w_down"] = \
+        params["layers"]["mlp"]["w_down"].at[D:].set(0.0)
+
+    T = max(args.max_context, 2 * env.obs_len + mtt)
+    peak = env.obs_len + mtt
+    batches = [int(b) for b in args.batches.split(",")]
+    print(f"\n# speculative regime: bandit, {cfg.n_layers}-layer model, "
+          f"{D}-layer exact self-draft (zeroed tail projections, α=1), "
+          f"max_turn_tokens={mtt}, equal pool memory")
+    print("# speculation,spec_k,draft_layers,env,batch,episodes,"
+          "gen_tokens,seconds,tokens_per_s,mean_accept,spec_proposed,"
+          "spec_accepted")
+    rows = []
+    for B in batches:
+        N = 2 * B
+        pool = B * paging.pages_per_slot(peak, ps)
+        configs = [
+            ("off", 0, 0, {}),
+            ("self", K, D, dict(speculation="self", spec_k=K,
+                                draft_layers=D)),
+        ]
+        by = {}
+        for label, k, d, skw in configs:
+            eng = CompiledRolloutEngine(
+                deep, env, max_turns=1, max_turn_tokens=mtt,
+                max_context=T, temperature=1.0, cache_layout="paged",
+                page_size=ps, cache_pages=pool, **skw)
+            toks, secs, stats = _bench_engine(eng, params, B,
+                                              args.repeats, n_episodes=N)
+            tps = toks / max(secs, 1e-9)
+            sr = int(getattr(stats, "spec_rounds", 0))
+            sa = int(getattr(stats, "spec_accepted", 0))
+            sp = int(getattr(stats, "spec_proposed", 0))
+            mean_accept = round((sa + sr) / sr, 2) if sr else 1.0
+            rows.append(dict(speculation=label, spec_k=k,
+                             draft_layers=d, env="bandit", batch=B,
+                             episodes=N, gen_tokens=toks,
+                             seconds=round(secs, 3),
+                             tokens_per_s=round(tps, 1),
+                             mean_accept=mean_accept,
+                             spec_proposed=sp, spec_accepted=sa))
+            by[label] = rows[-1]
+            print(f"{label},{k},{d},bandit,{B},{N},{toks},{secs:.3f},"
+                  f"{tps:.1f},{mean_accept},{sp},{sa}")
+        off, on = by["off"], by["self"]
+        bound = K * cfg.n_layers / (K * D + cfg.n_layers)
+        print(f"# batch={B}: speculation=self spec_k={K} runs "
+              f"{on['tokens_per_s'] / max(off['tokens_per_s'], 1e-9):.2f}x "
+              f"off tokens/s (α=1 sequential-read bound {bound:.2f}x), "
+              f"mean accepted length {on['mean_accept']}/{K}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -354,6 +454,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=40,
                     help="shared-prompt regime: fixed prompt tokens "
                          "prepended to every bandit observation")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative regime: chunk length for the "
+                         "speculation=self rows")
     # benchmarks.run calls main() with no argv — don't inherit its flags
     args = ap.parse_args(argv if argv is not None else [])
 
@@ -362,8 +465,10 @@ def main(argv=None):
     churn = _churn_section(args, model, params)
     shared = _shared_prefix_section(args, model, params)
     pressure = _pressure_section(args, model, params)
+    spec = _spec_section(args, model)
     return {"engine_grid": grid, "churn": churn,
-            "shared_prefix": shared, "pressure": pressure}
+            "shared_prefix": shared, "pressure": pressure,
+            "spec": spec}
 
 
 if __name__ == "__main__":

@@ -269,8 +269,15 @@ class PipelineSchedule:
                     n_episodes=tr.rollout_episodes,
                     ref_params=(ref_params if tr.ref_folded else None),
                     params_version=v)
-                exp = tr.expprep_stage(exp, ref_params=ref_params,
-                                       ref_folded=tr.ref_folded)
+                exp = tr.expprep_stage(
+                    exp, ref_params=ref_params, ref_folded=tr.ref_folded,
+                    # lag-1 fast path: the reference IS the behavior
+                    # snapshot that generated this batch, and sampling
+                    # recorded unbiased model log-probs
+                    reuse_behavior_lp=(
+                        ref_params is behavior and tr.top_p == 1.0
+                        and (tr.temperature <= 0.0
+                             or tr.temperature == 1.0)))
                 # capture the engine-reported source layout NOW — the
                 # next rollout overwrites it before the worker runs
                 src = (tr.dispatch_stage.source_shardings(exp)

@@ -37,6 +37,7 @@ the user-facing driver. Every stage transition stays observable: per-step
 """
 from __future__ import annotations
 
+import logging
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -85,6 +86,13 @@ class StepRecord:
     preemptions: int = 0
     requeue_depth: int = 0
     pool_grows: int = 0
+    # speculative-decoding acceptance telemetry (0 unless speculation is
+    # on): draft tokens proposed / accepted and verify rounds run — mean
+    # accepted length per round is (spec_accepted + spec_rounds) /
+    # spec_rounds (the +1 is the always-committed exact token)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+    spec_rounds: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -149,12 +157,30 @@ class ExpPrepStage:
         self.advantage = advantage
         self.group_size = group_size
         self._ref_step = jax.jit(make_ref_logprob_step(model))
+        self._logged_lp_reuse = False
 
     def __call__(self, exp: ExperienceBatch, *, ref_params=None,
-                 ref_folded: bool = True) -> ExperienceBatch:
+                 ref_folded: bool = True,
+                 reuse_behavior_lp: bool = False) -> ExperienceBatch:
         if ref_params is not None and not ref_folded:
-            exp = exp.with_(ref_logprobs=self._ref_step(ref_params,
-                                                        exp.tokens))
+            if reuse_behavior_lp:
+                # fast path: the reference IS the params that generated
+                # the rollout (lag-1 snapshot) and sampling was unbiased,
+                # so the behavior log-probs the engine already recorded
+                # ARE the reference log-probs at every loss position
+                # (loss_mask == gen_mask; obs positions are never read by
+                # the KL term) — skip the second full-model evaluation
+                if not self._logged_lp_reuse:
+                    self._logged_lp_reuse = True
+                    logging.getLogger(__name__).info(
+                        "ExpPrepStage: reference == behavior params — "
+                        "reusing rollout log-probs for the ref pass "
+                        "(standalone ref forward pass skipped)")
+                exp = exp.with_(ref_logprobs=jnp.where(
+                    exp.gen_mask, exp.logprobs, 0.0))
+            else:
+                exp = exp.with_(ref_logprobs=self._ref_step(ref_params,
+                                                            exp.tokens))
         if self.advantage == "group":
             adv = group_relative_advantages(exp.rewards, self.group_size)
         else:
@@ -273,6 +299,9 @@ class EarlTrainer:
     pool_growth: str = "off"                # paged: "off" | "double"
     pool_growth_max: Optional[int] = None   # growth cap (None = full)
     admit_watermark: Optional[int] = None   # preempt: free-page watermark
+    speculation: str = "off"                # compiled+paged: |"self"|"draft"
+    spec_k: int = 4                         # speculative chunk length
+    draft_layers: Optional[int] = None      # "self": draft depth (None=L/2)
     pipeline: str = "sync"                  # "sync" | "async"
     max_policy_lag: int = 1                 # async: bounded staleness
     is_rho_max: float = 0.0                 # truncated-IS cap (0 = off)
@@ -312,7 +341,9 @@ class EarlTrainer:
                 share_prefix=self.share_prefix, prefix_len=self.prefix_len,
                 on_exhaust=self.on_exhaust, pool_growth=self.pool_growth,
                 pool_growth_max=self.pool_growth_max,
-                admit_watermark=self.admit_watermark, **kw)
+                admit_watermark=self.admit_watermark,
+                speculation=self.speculation, spec_k=self.spec_k,
+                draft_layers=self.draft_layers, **kw)
         elif self.rollout_backend == "python":
             if self.rollout_episodes is not None:
                 raise ValueError(
@@ -344,6 +375,12 @@ class EarlTrainer:
                     "rollout_backend='compiled' with cache_layout='paged' "
                     "(the pressure governor and pool growth act on the "
                     "paged pool inside the compiled macro-step)")
+            if self.speculation != "off":
+                raise ValueError(
+                    "speculation requires rollout_backend='compiled' "
+                    "with cache_layout='paged' (the draft-propose / "
+                    "batch-verify rounds live in the compiled macro-"
+                    "step's generation loop)")
             self.rollout = RolloutEngine(self.model, self.env, **kw)
         else:
             raise ValueError(
@@ -351,10 +388,15 @@ class EarlTrainer:
 
         # prefix sharing forks only the POLICY's paged pool; the in-graph
         # reference pass keeps a dense cache and cannot skip the shared
-        # columns, so a sharing engine falls back to the standalone
-        # ExpPrep ref program instead of folding the ref into the rollout
-        # (announced once via _maybe_warn_ref_fallback when it first bites)
-        self.ref_folded = not getattr(self.rollout, "shared_pages", 0)
+        # columns. Speculation likewise unfolds the ref pass: the folded
+        # ref decode consumes tokens one scan step at a time and cannot
+        # consume drafted chunks. Either way the trainer falls back to
+        # the standalone ExpPrep ref program instead of folding the ref
+        # into the rollout (announced once via _maybe_warn_ref_fallback
+        # when it first bites).
+        self.ref_folded = (
+            not getattr(self.rollout, "shared_pages", 0)
+            and getattr(self.rollout, "speculation", "off") == "off")
         self._warned_ref_fallback = False
         self.rollout_stage = RolloutStage(self.rollout, self.selector)
         self.expprep_stage = ExpPrepStage(
@@ -440,6 +482,9 @@ class EarlTrainer:
             preemptions=getattr(stats, "preemptions", 0),
             requeue_depth=getattr(stats, "requeue_depth", 0),
             pool_grows=getattr(stats, "pool_grows", 0),
+            spec_proposed=getattr(stats, "spec_proposed", 0),
+            spec_accepted=getattr(stats, "spec_accepted", 0),
+            spec_rounds=getattr(stats, "spec_rounds", 0),
         )
         self.history.append(rec)
         return rec
@@ -453,15 +498,24 @@ class EarlTrainer:
                 or self._warned_ref_fallback:
             return
         self._warned_ref_fallback = True
+        if getattr(self.rollout, "speculation", "off") != "off":
+            reason = (
+                f"speculation={self.rollout.speculation!r} — the folded "
+                "reference pass consumes tokens one decode step at a "
+                "time and cannot consume the drafted chunks the "
+                "speculative generation loop commits")
+        else:
+            reason = (
+                "share_prefix=True — the reference model's dense cache "
+                f"cannot fork the {self.rollout.shared_len}-token "
+                "shared prefix run")
         warnings.warn(
             "EarlTrainer: reference log-probs will come from the "
             "STANDALONE ExpPrep program, not the in-graph rollout fold "
-            "(reason: share_prefix=True — the reference model's dense "
-            f"cache cannot fork the {self.rollout.shared_len}-token "
-            "shared prefix run, so folding ref_params into the compiled "
-            "macro-step is unsupported; see rl/engine/README.md). The "
-            "ref pass re-decodes each harvested context in a separate "
-            "program per step.",
+            f"(reason: {reason}, so folding ref_params into the "
+            "compiled macro-step is unsupported; see "
+            "rl/engine/README.md). The ref pass re-decodes each "
+            "harvested context in a separate program per step.",
             RuntimeWarning, stacklevel=3)
 
     # ------------------------------------------------------------------
@@ -483,9 +537,16 @@ class EarlTrainer:
         t_roll = time.perf_counter() - t0
 
         # ② Experience Preparation (advantages; ref folded into the
-        # rollout unless prefix sharing forced the standalone fallback)
+        # rollout unless prefix sharing / speculation forced the
+        # standalone fallback — which itself is skipped when the
+        # reference IS the behavior params and sampling recorded
+        # unbiased model log-probs: temperature 1 or greedy, top_p off)
+        reuse_lp = (ref_params is params and self.top_p == 1.0
+                    and (self.temperature <= 0.0
+                         or self.temperature == 1.0))
         exp = self.expprep_stage(exp, ref_params=ref_params,
-                                 ref_folded=self.ref_folded)
+                                 ref_folded=self.ref_folded,
+                                 reuse_behavior_lp=reuse_lp)
 
         # ③④⑤ Dispatch to the Update layout
         self.check_fault("dispatch", step)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the speculative verify attention kernel.
+
+The verify pass scores a chunk of ``K`` candidate tokens per row in one
+batched attention call. The chunk's K/V has already been bulk-scattered
+into the row's pool pages (the k-token decode write), so the oracle is
+``paged_decode_attention_ref`` generalized to K queries with a per-query
+length: query ``j`` sits at absolute position ``pos[b]+j`` and attends
+pool positions ``<= pos[b]+j`` — committed context plus the chunk's own
+causal prefix, both read from the pool. At ``K == 1`` this IS the
+single-token oracle with ``lens = pos + 1``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def spec_verify_attention_ref(q, k_pages, v_pages, block_table, pos,
+                              k_scales=None, v_scales=None):
+    """q: (B,K,H,hd) K queries per row; k_pages,v_pages: (P,ps,KV,hd)
+    shared page pool with the chunk K/V already scattered at positions
+    ``pos[b]..pos[b]+K-1``; block_table: (B,NP) int32 (-1 = unmapped);
+    pos: (B,) int32 base positions. k_scales/v_scales: optional (P,ps,KV)
+    f32 int8-pool scales — the oracle dequantizes the whole pool up front
+    (``paging.dequantize_kv`` semantics), which the kernel must match
+    while dequantizing lazily. Returns (B,K,H,hd).
+
+    A query row is fully masked only when its own position's page is
+    unmapped (pool exhaustion dropped the chunk write) — those rows
+    return zeros, matching the kernel's ``l == 0`` guard.
+    """
+    B, K, H, hd = q.shape
+    P, ps, KV, _ = k_pages.shape
+    NP = block_table.shape[1]
+    group = H // KV
+
+    if k_scales is not None:
+        k_pages = k_pages.astype(jnp.float32) \
+            * k_scales.astype(jnp.float32)[..., None]
+        v_pages = v_pages.astype(jnp.float32) \
+            * v_scales.astype(jnp.float32)[..., None]
+
+    bt_c = jnp.clip(block_table, 0, P - 1)
+    k = k_pages[bt_c].reshape(B, NP * ps, KV, hd)           # (B,S,KV,hd)
+    v = v_pages[bt_c].reshape(B, NP * ps, KV, hd)
+    s_idx = jnp.arange(NP * ps)[None, None, :]              # (1,1,S)
+    mapped = jnp.repeat(block_table >= 0, ps, axis=1)       # (B,S)
+    qpos = pos[:, None] + jnp.arange(K)[None, :]            # (B,K)
+    valid = (s_idx <= qpos[:, :, None]) & mapped[:, None, :]  # (B,K,S)
+
+    qf = q.astype(jnp.float32).reshape(B, K, KV, group, hd)
+    kf = k.astype(jnp.float32).transpose(0, 2, 1, 3)        # (B,KV,S,hd)
+    vf = v.astype(jnp.float32).transpose(0, 2, 1, 3)
+    s = jnp.einsum("bjkgh,bksh->bjkgs", qf, kf) / jnp.sqrt(hd)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully masked query rows: zero output, not a uniform average
+    p = jnp.where(jnp.any(valid, axis=2)[:, :, None, None, None], p, 0.0)
+    out = jnp.einsum("bjkgs,bksh->bjkgh", p, vf)
+    return out.reshape(B, K, H, hd).astype(q.dtype)

@@ -95,6 +95,19 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (1.0 = off; ignored "
                          "when greedy)")
+    ap.add_argument("--speculation", default="off",
+                    choices=["off", "self", "draft"],
+                    help="in-graph speculative decoding (compiled engine "
+                         "+ paged layout): self = truncated-layer-stack "
+                         "draft of the policy itself; committed tokens "
+                         "are bit-identical to speculation=off")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative chunk length: 1 exact token + up "
+                         "to spec-k - 1 draft proposals verified per "
+                         "round")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="speculation=self: layers in the draft's "
+                         "truncated stack (default n_layers // 2)")
     ap.add_argument("--pipeline", default="sync",
                     choices=["sync", "async"],
                     help="async = overlap Rollout(k+1) with Update(k) "
@@ -174,6 +187,8 @@ def main(argv=None):
         pool_growth=args.pool_growth,
         pool_growth_max=args.pool_growth_max,
         kv_dtype=args.kv_dtype, sampling=args.sampling, top_p=args.top_p,
+        speculation=args.speculation, spec_k=args.spec_k,
+        draft_layers=args.draft_layers,
         pipeline=args.pipeline,
         max_policy_lag=args.max_policy_lag,
         max_retries=args.max_retries,
@@ -217,6 +232,9 @@ def main(argv=None):
                 "preemptions": rec.preemptions,
                 "requeue_depth": rec.requeue_depth,
                 "pool_grows": rec.pool_grows,
+                "spec_proposed": rec.spec_proposed,
+                "spec_accepted": rec.spec_accepted,
+                "spec_rounds": rec.spec_rounds,
             }
             f.write(json.dumps(row) + "\n")
     print(f"done: {args.steps} steps in {wall:.1f}s "

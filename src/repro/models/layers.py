@@ -564,6 +564,98 @@ def paged_decode_attention(p, x, kv: KVEntry, block_table, pos, *, wpage,
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), kv
 
 
+def spec_verify_chunk_attention(p, x, kv: KVEntry, block_table, pos, *,
+                                wpage, woff, scrub=None, cow_src=None,
+                                cow_dst=None, n_heads, n_kv_heads, head_dim,
+                                rope_theta, attn_impl: str = "xla"):
+    """Speculative-verify attention for a chunk of K candidate tokens.
+    x: (B,K,D) chunk hidden states at absolute positions
+    ``pos[b]..pos[b]+K-1``; the committed pool context ends at ``pos``.
+
+    The k-token generalization of ``paged_decode_attention``'s write-then-
+    attend step: the WHOLE chunk's K/V is bulk-scattered into pool entries
+    ``(wpage, woff)`` (both (B,K); sentinel ``P`` drops — non-advancing
+    rows, positions beyond the row's token budget, exhausted pool,
+    CoW-blocked), quantizing on write for int8 pools exactly like the
+    single-token path (per-token-per-kv-head scales, so the stored bytes
+    are bitwise what K sequential writes would have stored). Attention
+    then reads everything BACK from the pool with per-query validity
+    ``idx <= pos+j`` — each query sees the page-ordered, pool-precision
+    keys the sequential step would have seen at its position, which is
+    what keeps speculative greedy decode bit-identical to non-speculative.
+    Chunk entries beyond the eventually accepted prefix stay above the
+    fill line: invisible to every later read and rewritten by the next
+    chunk before the fill line can reach them.
+
+    scrub / cow_src / cow_dst: same single-page-per-row semantics as
+    ``paged_decode_attention`` — only the chunk's FIRST page can pre-exist
+    (mid-page fill line / shared prefix run); later chunk pages are
+    freshly allocated at offset 0.
+    """
+    B, K, _ = x.shape
+    P, ps = kv.k.shape[0], kv.k.shape[1]
+    NP = block_table.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(K)[None, :]       # (B,K)
+    q, k_new, v_new = _project_qkv(p, x, n_heads, n_kv_heads, head_dim)
+    q = apply_rope(q, positions, rope_theta)
+    k_new = apply_rope(k_new, positions, rope_theta)
+    quant = _pool_is_quantized(kv)
+    if cow_src is not None:
+        src_c = jnp.clip(cow_src, 0, P - 1)
+        kv = kv._replace(
+            k=kv.k.at[cow_dst].set(kv.k[src_c], mode="drop"),
+            v=kv.v.at[cow_dst].set(kv.v[src_c], mode="drop"))
+        if quant:
+            kv = kv._replace(
+                k_scale=kv.k_scale.at[cow_dst].set(kv.k_scale[src_c],
+                                                   mode="drop"),
+                v_scale=kv.v_scale.at[cow_dst].set(kv.v_scale[src_c],
+                                                   mode="drop"))
+    if scrub is not None:
+        zero = jnp.zeros((), kv.k.dtype)
+        kv = kv._replace(k=kv.k.at[scrub].set(zero, mode="drop"),
+                         v=kv.v.at[scrub].set(zero, mode="drop"))
+        if quant:
+            zf = jnp.zeros((), jnp.float32)
+            kv = kv._replace(k_scale=kv.k_scale.at[scrub].set(zf,
+                                                              mode="drop"),
+                             v_scale=kv.v_scale.at[scrub].set(zf,
+                                                              mode="drop"))
+    if quant:
+        qk, sk = paging.quantize_kv(k_new)      # (B,K,KV,hd) i8 + (B,K,KV)
+        qv, sv = paging.quantize_kv(v_new)
+        kv = KVEntry(
+            kv.k.at[wpage, woff].set(qk, mode="drop"),
+            kv.v.at[wpage, woff].set(qv, mode="drop"),
+            kv.k_scale.at[wpage, woff].set(sk, mode="drop"),
+            kv.v_scale.at[wpage, woff].set(sv, mode="drop"))
+    else:
+        kv = KVEntry(
+            kv.k.at[wpage, woff].set(k_new.astype(kv.k.dtype), mode="drop"),
+            kv.v.at[wpage, woff].set(v_new.astype(kv.v.dtype), mode="drop"))
+    if attn_impl in ("paged", "pallas"):
+        from repro.kernels.spec_verify import ops as sv_ops
+        out = sv_ops.spec_verify_attention(q, kv.k, kv.v, block_table, pos,
+                                           k_scales=kv.k_scale,
+                                           v_scales=kv.v_scale,
+                                           interpret=True)
+    else:
+        # gather + mask per kernels/spec_verify/ref.py; attend via _sdpa so
+        # the fallback matches the single-token paged fallback's
+        # mixed-precision numerics bitwise per query position
+        bt_c = jnp.clip(block_table, 0, P - 1)
+        k, v = _gather_pool(kv, bt_c, B, NP * ps, n_kv_heads, head_dim,
+                            q.dtype)
+        s_idx = jnp.arange(NP * ps)[None, None, :]          # (1,1,Sk)
+        valid = ((s_idx <= positions[:, :, None])
+                 & jnp.repeat(block_table >= 0, ps, axis=1)[:, None, :])
+        mask = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None]
+        out = _sdpa(q, k, v, mask)
+    out = out.reshape(B, K, n_heads * head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), kv
+
+
 # ---------------------------------------------------------------------------
 # SwiGLU MLP
 # ---------------------------------------------------------------------------

@@ -392,6 +392,124 @@ def decode_step(cfg: ModelConfig, params, token, cache, *,
     return logits, DecodeCache(kv=new_kv, pos=pos + adv.astype(jnp.int32))
 
 
+def spec_verify_step(cfg: ModelConfig, params, chunk,
+                     cache: PagedDecodeCache, *, attn_impl: str = "xla",
+                     advance=None, eff_k=None, cow: bool = True):
+    """Score a (B, K) chunk of candidate tokens against the full model in
+    ONE batched pass (paged layout only) — the verify half of speculative
+    decoding. ``chunk[:, 0]`` is the token the non-speculative engine
+    would have committed next (sampled exactly from the previous logits);
+    ``chunk[:, j>0]`` are draft proposals. Returns ``(logits (B, K, V),
+    cache)`` where ``logits[:, j]`` is the full model's next-token
+    distribution AFTER consuming ``chunk[:, :j+1]``.
+
+    The page allocator runs once, outside the layer scan, and maps EVERY
+    page covering ``[pos, pos+eff_k)`` up front (a static loop of
+    rank-match allocs — K consecutive positions touch at most
+    ``(K-1)//page_size + 2`` pages); the whole chunk's K/V is then
+    bulk-scattered per layer. ``cache.pos`` is NOT advanced — the caller
+    learns the accepted prefix length from the logits and commits with
+    ``spec_commit``; chunk entries beyond the committed count stay above
+    the fill line (invisible, rewritten by the next chunk).
+
+    advance: (B,) bool — rows with False are complete no-ops. eff_k: (B,)
+    int32 — positions ``j >= eff_k[b]`` are neither allocated for nor
+    written (rows near their turn token budget); their logits are
+    garbage and must not be committed. cow: as in ``_paged_decode_step``
+    — only the chunk's FIRST page can be a shared (CoW) page, since
+    later chunk pages are freshly allocated.
+    """
+    B, K = chunk.shape
+    x = L.embed(params["embedding"], chunk)                  # (B,K,D)
+    pos = cache.pos
+    adv = jnp.ones((B,), bool) if advance is None else advance
+    ek = jnp.full((B,), K, jnp.int32) if eff_k is None \
+        else jnp.asarray(eff_k, jnp.int32)
+    ps, P = cache.page_size, cache.n_pages
+    NP = cache.block_table.shape[1]
+    rows = jnp.arange(B)
+
+    pidx0 = jnp.clip(pos // ps, 0, NP - 1)
+    last = pos + jnp.maximum(ek, 1) - 1      # last chunk position per row
+    lastd = jnp.clip(last // ps, 0, NP - 1) - pidx0
+    bt = cache.block_table
+    refcount = cache.refcount
+    n_span = (K + ps - 2) // ps + 1          # max pages a chunk can touch
+    fresh0 = jnp.zeros((B,), bool)
+    for d in range(n_span):
+        pidx = jnp.clip(pidx0 + d, 0, NP - 1)
+        within = adv & (ek > 0) & (d <= lastd)
+        mapped = bt[rows, pidx] >= 0
+        need = within & ~mapped
+        pages, refcount = paging.alloc_pages(refcount, need)
+        fresh = need & (pages < P)
+        bt = bt.at[rows, pidx].set(jnp.where(fresh, pages, bt[rows, pidx]))
+        if d == 0:
+            fresh0 = fresh
+    if cow:
+        cow_src, cow_dst, blocked, refcount, bt = paging.cow_pages(
+            refcount, bt, pidx0, adv & (ek > 0) & (bt[rows, pidx0] >= 0))
+    else:
+        cow_src = cow_dst = None
+        blocked = jnp.zeros((B,), bool)
+    # a freshly alloc'd first page mapping mid-row (woff > 0) is
+    # exhaustion recovery — scrub it (see _paged_decode_step); later
+    # chunk pages always map at offset 0 (the chunk is contiguous)
+    scrub = jnp.where(fresh0 & (pos % ps > 0), bt[rows, pidx0], P)
+
+    # per-position write plan: (B,K) page + offset, sentinel P drops
+    # non-advancing rows, positions past eff_k, unmapped (exhausted)
+    # pages, and CoW-blocked writes into the still-shared first page
+    j = jnp.arange(K)[None, :]
+    cpos = pos[:, None] + j                                  # (B,K)
+    pidx_j = jnp.clip(cpos // ps, 0, NP - 1)
+    wp = bt[rows[:, None], pidx_j]                           # (B,K)
+    in_first = pidx_j == pidx0[:, None]
+    w_ok = (adv[:, None] & (j < ek[:, None]) & (wp >= 0)
+            & ~(blocked[:, None] & in_first))
+    wpage = jnp.where(w_ok, wp, P)
+    woff = cpos % ps
+
+    def body(x, scanned):
+        layer_p, kv_l = scanned
+        h = L.rms_norm(x, layer_p["ln1"], cfg.rms_eps)
+        h, new_kv = L.spec_verify_chunk_attention(
+            layer_p["attn"], h, kv_l, bt, pos, wpage=wpage, woff=woff,
+            scrub=scrub, cow_src=cow_src, cow_dst=cow_dst,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta,
+            attn_impl=attn_impl)
+        x = x + h
+        h = L.rms_norm(x, layer_p["ln2"], cfg.rms_eps)
+        x = x + L.mlp(layer_p["mlp"], h)
+        return x, new_kv
+
+    x, new_kv = lax.scan(body, x, (params["layers"], cache.kv))
+    x = L.rms_norm(x, params["ln_f"], cfg.rms_eps)
+    head = params.get("lm_head", params["embedding"])
+    logits = L.unembed(head, x)                              # (B,K,V)
+    return logits, PagedDecodeCache(kv=new_kv, block_table=bt,
+                                    refcount=refcount, pos=pos)
+
+
+def spec_commit(cache: PagedDecodeCache, n_commit):
+    """Advance the paged fill line by ``n_commit`` (B,) committed tokens
+    after a ``spec_verify_step`` — validity everywhere is ``idx < pos``,
+    so this single add is the whole commit."""
+    return cache._replace(pos=cache.pos
+                          + jnp.asarray(n_commit, jnp.int32))
+
+
+def draft_params_view(params, draft_layers: int):
+    """Truncated-layer-stack view of dense-family params for
+    ``speculation="self"``: the first ``draft_layers`` layers of the
+    stacked layer axis, sharing the embedding / ln_f / lm_head (early
+    exit). A slice view, not a copy — XLA aliases it."""
+    return {**params,
+            "layers": jax.tree_util.tree_map(lambda l: l[:draft_layers],
+                                             params["layers"])}
+
+
 def scan_body_over(step_fn):
     """Wrap a decode-step callable ``(token, advance, cache) -> (logits,
     cache)`` into a ``lax.scan`` body ``((logits, cache), (token,

@@ -68,6 +68,14 @@ class RolloutStats:
     preemptions: int = 0            # slots evicted under memory pressure
     requeue_depth: int = 0          # peak episodes awaiting re-admission
     pool_grows: int = 0             # host-side pool doublings
+    # speculative decoding (all 0 when speculation="off"): draft tokens
+    # proposed, draft tokens accepted by the verify pass, and the number
+    # of verify rounds. The verify pass commits one exactly-sampled token
+    # per round regardless of acceptance, so
+    #   mean accepted length = (spec_accepted + spec_rounds) / spec_rounds
+    spec_proposed: int = 0          # draft tokens proposed
+    spec_accepted: int = 0          # draft tokens accepted
+    spec_rounds: int = 0            # verify rounds run
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +187,41 @@ def sample_tokens(rng, logits, temperature: float, top_p: float = 1.0):
     return tok, token_lp(lg, tok)
 
 
+def sample_noise(rng, shape):
+    """Gumbel noise tensor making ``sample_with_noise`` reproduce
+    ``sample_tokens`` for the same key: ``categorical(rng, lg)`` is
+    ``argmax(lg + gumbel(rng))`` computed with the same draw order."""
+    return jax.random.gumbel(rng, shape, jnp.float32)
+
+
+def sample_with_noise(logits, noise, temperature: float, top_p: float = 1.0):
+    """``sample_tokens`` with externally supplied Gumbel noise.
+
+    The speculative verify pass needs the *deterministic* interpretation of
+    sampling — token = argmax(tempered_logits + noise) — so it can (a)
+    recompute the token the non-speculative engine would have sampled at a
+    given step index from that step's noise row, and (b) score K candidate
+    positions in one call by vmapping over rows of a precomputed noise
+    tensor. ``sample_tokens(rng, lg, t, p)`` and
+    ``sample_with_noise(lg, sample_noise(rng, lg.shape), t, p)`` return
+    bit-identical (tokens, logprobs): ``jax.random.categorical`` IS
+    Gumbel-argmax over f32 noise, and the log-prob comes from the same
+    tempered/filtered distribution.
+
+    Greedy (``temperature <= 0``) ignores ``noise`` entirely (pass zeros).
+    """
+    lg = jnp.asarray(logits).astype(jnp.float32)
+    if temperature <= 0.0:
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    else:
+        lg = lg / temperature
+        if top_p < 1.0:
+            from repro.kernels.fused_sample.ops import apply_top_p
+            lg = apply_top_p(lg, top_p)
+        tok = jnp.argmax(lg + noise, axis=-1).astype(jnp.int32)
+    return tok, token_lp(lg, tok)
+
+
 # ---------------------------------------------------------------------------
 # Stats assembly
 # ---------------------------------------------------------------------------
@@ -188,7 +231,9 @@ def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
               params_version: int = -1, pages_in_use: int = 0,
               page_capacity: int = 0, kv_dropped_writes: int = 0,
               shared_prefix_len: int = 0, preemptions: int = 0,
-              requeue_depth: int = 0, pool_grows: int = 0) -> RolloutStats:
+              requeue_depth: int = 0, pool_grows: int = 0,
+              spec_proposed: int = 0, spec_accepted: int = 0,
+              spec_rounds: int = 0) -> RolloutStats:
     turn_lengths = np.asarray(turn_lengths)
     context_lengths = np.asarray(context_lengths)
     tl = turn_lengths[turn_lengths > 0]
@@ -210,4 +255,7 @@ def summarize(turn_lengths, context_lengths, n_turns, truncated, rewards, *,
         preemptions=int(preemptions),
         requeue_depth=int(requeue_depth),
         pool_grows=int(pool_grows),
+        spec_proposed=int(spec_proposed),
+        spec_accepted=int(spec_accepted),
+        spec_rounds=int(spec_rounds),
     )

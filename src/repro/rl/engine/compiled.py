@@ -72,6 +72,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.models import transformer as dense_tf
 from repro.rl.algo import reinforce_advantages
 from repro.rl.engine import common, paging, slots
 from repro.rl.engine.common import ACTION_BASE
@@ -129,7 +130,11 @@ class CompiledRolloutEngine:
                  on_exhaust: str = "count",
                  pool_growth: str = "off",
                  pool_growth_max: Optional[int] = None,
-                 admit_watermark: Optional[int] = None):
+                 admit_watermark: Optional[int] = None,
+                 speculation: str = "off",
+                 spec_k: int = 4,
+                 draft_layers: Optional[int] = None,
+                 draft_model=None):
         cfg = model.cfg
         assert ACTION_BASE + env.n_actions <= cfg.vocab_size
         assert getattr(env, "jit_safe", False), (
@@ -175,6 +180,54 @@ class CompiledRolloutEngine:
                              f"got {sampling!r}")
         if not 0.0 < top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {top_p}")
+        if speculation not in ("off", "self", "draft"):
+            raise ValueError(f"speculation must be 'off', 'self' or "
+                             f"'draft', got {speculation!r}")
+        if speculation != "off":
+            if cache_layout != "paged":
+                raise ValueError(
+                    "speculation requires cache_layout='paged' — the "
+                    "verify pass bulk-scatters the candidate chunk into "
+                    "pool pages before attending (see "
+                    "models/transformer.spec_verify_step)")
+            if cfg.family != "dense":
+                raise ValueError(
+                    f"speculation is a dense-family feature (the verify "
+                    f"step and the draft's truncated layer stack live in "
+                    f"models/transformer.py); got family "
+                    f"{cfg.family!r}")
+            if sampling == "fused":
+                raise ValueError(
+                    "speculation='"+speculation+"' is incompatible with "
+                    "sampling='fused': the speculative path samples from "
+                    "precomputed per-step noise rows so the committed "
+                    "stream stays bit-identical to non-speculative "
+                    "decode; the fused sampler draws one token per call")
+            if spec_k < 2:
+                raise ValueError(
+                    f"spec_k must be >= 2 (k=1 is non-speculative "
+                    f"decode), got {spec_k}")
+        if speculation == "self":
+            if draft_layers is None:
+                draft_layers = max(1, cfg.n_layers // 2)
+            if not 1 <= draft_layers < cfg.n_layers:
+                raise ValueError(
+                    f"draft_layers must be in [1, n_layers) = "
+                    f"[1, {cfg.n_layers}), got {draft_layers}")
+        if speculation == "draft":
+            if draft_model is None:
+                raise ValueError(
+                    "speculation='draft' requires a draft_model (a small "
+                    "registry Model whose params are passed to "
+                    "run(draft_params=...)); use speculation='self' for "
+                    "the truncated-layer-stack draft")
+            if draft_model.cfg.family != "dense":
+                raise ValueError("draft_model must be dense-family")
+            if draft_model.cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft_model vocab ({draft_model.cfg.vocab_size}) "
+                    f"must match the policy's ({cfg.vocab_size}): the "
+                    f"draft proposes token ids the verify pass scores")
         self.model = model
         self.env = env
         self.max_turns = max_turns
@@ -198,6 +251,18 @@ class CompiledRolloutEngine:
         self.admit_watermark = (
             admit_watermark if admit_watermark is not None
             else math.ceil((max_turn_tokens + env.obs_len) / page_size) + 1)
+        self.speculation = speculation
+        self.spec_k = spec_k
+        self.draft_layers = draft_layers
+        self.draft_model = draft_model
+        if speculation == "self":
+            import dataclasses
+            self._draft_cfg = dataclasses.replace(cfg,
+                                                  n_layers=draft_layers)
+        elif speculation == "draft":
+            self._draft_cfg = draft_model.cfg
+        else:
+            self._draft_cfg = None
         self.share_prefix = share_prefix
         # the shared run covers FULL pages of the episode-initial
         # observation's common prefix, and never the whole observation:
@@ -263,6 +328,13 @@ class CompiledRolloutEngine:
         # With sharing ON it stays armed as insurance even though the
         # engine's page-aligned runs never trigger it.
         cow_kw = {"cow": False} if paged and shared_pages == 0 else {}
+        speculation = self.speculation
+        spec_on = speculation != "off"
+        spec_k = self.spec_k
+        draft_cfg = self._draft_cfg
+        draft_layers = self.draft_layers
+        vocab = model.cfg.vocab_size
+        model_cfg = model.cfg
         preempt = self.on_exhaust == "preempt"
         per_admit = -(-(olen - shared_len) // page_size)
         admit_wm = self.admit_watermark
@@ -299,19 +371,24 @@ class CompiledRolloutEngine:
             lp = common.token_lp(ref_logits, tok)
             return jnp.where(mask & (pos > 0), lp, 0.0)
 
-        def feed_obs(decode, ref_decode, logits, cache, ref_logits,
-                     ref_cache, tokens, ref_lp_buf, pos, obs, mask,
-                     skip=None, n_skip: int = 0):
+        def feed_obs(decode, ref_decode, draft_decode, logits, cache,
+                     ref_logits, ref_cache, tokens, ref_lp_buf, pos, obs,
+                     mask, draft_cache=None, skip=None, n_skip: int = 0):
             """Teacher-force obs columns into ``mask`` rows (scan). The
             reference model (when folded in) consumes the same columns and
-            scores each before advancing. ``skip`` rows sit out the first
+            scores each before advancing; the speculative draft model
+            (when on) consumes them too so its cache tracks the committed
+            stream (its logits are discarded — proposals always start
+            from a freshly consumed c0). ``skip`` rows sit out the first
             ``n_skip`` columns (their cache already holds those tokens —
             the forked shared-prefix pages) and join at column
             ``n_skip``, where their fill position already points."""
+            d_logits = (jnp.zeros((B, vocab), jnp.float32)
+                        if draft_decode is not None else None)
 
             def body(carry, x):
                 (logits, cache, ref_logits, ref_cache, tokens,
-                 ref_lp_buf, pos) = carry
+                 ref_lp_buf, pos, d_logits, draft_cache) = carry
                 if n_skip > 0:
                     col, j = x
                     m = mask & (~skip | (j >= n_skip))
@@ -326,20 +403,23 @@ class CompiledRolloutEngine:
                         rlp, mode="drop")
                     (ref_logits, ref_cache), _ = ref_decode(
                         (ref_logits, ref_cache), (col, m))
+                if draft_decode is not None:
+                    (d_logits, draft_cache), _ = draft_decode(
+                        (d_logits, draft_cache), (col, m))
                 (logits, cache), _ = decode((logits, cache), (col, m))
                 pos = pos + m.astype(jnp.int32)
                 return (logits, cache, ref_logits, ref_cache, tokens,
-                        ref_lp_buf, pos), None
+                        ref_lp_buf, pos, d_logits, draft_cache), None
 
             cols = jnp.swapaxes(jnp.asarray(obs, jnp.int32), 0, 1)
             xs = ((cols, jnp.arange(cols.shape[0], dtype=jnp.int32))
                   if n_skip > 0 else cols)
             (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
-             pos), _ = lax.scan(
+             pos, _, draft_cache), _ = lax.scan(
                 body, (logits, cache, ref_logits, ref_cache, tokens,
-                       ref_lp_buf, pos), xs)
+                       ref_lp_buf, pos, d_logits, draft_cache), xs)
             return (logits, cache, ref_logits, ref_cache, tokens,
-                    ref_lp_buf, pos)
+                    ref_lp_buf, pos, draft_cache)
 
         def sample_and_write(decode, logits, cache, krng, write):
             """The fused sample-and-write step (``sampling="fused"``):
@@ -405,6 +485,144 @@ class CompiledRolloutEngine:
             out, _ = lax.scan(body, init, krngs)
             return out
 
+        def spec_gen_turn(params, d_params, logits, cache, draft_cache,
+                          tokens, gen_mask, logprobs, pos, active, trng):
+            """One turn of speculative generation: a ``lax.while_loop``
+            over verify rounds instead of a scan over single decode steps.
+
+            Each round, per still-writing row: c0 is sampled EXACTLY as
+            the non-speculative engine would from the carried logits; the
+            draft model then proposes up to ``spec_k - 1`` follow-on
+            tokens sequentially; ONE batched ``spec_verify_step`` scores
+            all chunk positions against the full model; and the longest
+            prefix whose tokens match what the full model would have
+            sampled (from the SAME per-step noise rows) is committed.
+            Every round commits >= 1 token per writing row, so the loop
+            runs at most ``mtt`` rounds and — because acceptance is
+            judged against the exact non-speculative sampling rule — the
+            committed stream is bit-identical to ``gen_turn``'s at equal
+            rng (greedy always; sampled when the verify logits match the
+            sequential logits bitwise, which the scatter-first verify
+            kernel guarantees).
+            """
+            K = spec_k
+            if temperature > 0.0:
+                # per-step Gumbel noise from the SAME keys gen_turn uses:
+                # jax.random.categorical(key, lg) == argmax(lg +
+                # gumbel(key, lg.shape, f32)); row b's token at
+                # turn-index t draws noise row (t, b) in both engines
+                noise_all = jax.vmap(
+                    lambda t: common.sample_noise(
+                        common.sample_rng(trng, t), (B, vocab)))(
+                            jnp.arange(mtt))
+            else:
+                noise_all = None
+            dummy_noise = jnp.zeros((B, vocab), jnp.float32)
+
+            def noise_at(step_idx):
+                """(B,) per-row turn-step index -> (B,V) noise rows."""
+                if noise_all is None:
+                    return dummy_noise              # greedy: never read
+                return noise_all[jnp.clip(step_idx, 0, mtt - 1), rows]
+
+            def draft_step(tok, dc, adv):
+                return dense_tf.decode_step(draft_cfg, d_params, tok, dc,
+                                            advance=adv)
+
+            def cond(carry):
+                acted, tl = carry[7], carry[10]
+                return jnp.any(active & ~acted & (tl < mtt))
+
+            def body(carry):
+                (logits, cache, draft_cache, tokens, gen_mask, logprobs,
+                 pos, acted, actions, last_tok, tl, sp, sa, sr) = carry
+                write = active & ~acted & (tl < mtt)
+                ek = jnp.where(write, jnp.minimum(K, mtt - tl), 0)
+                # c0: the exact token the non-speculative engine commits
+                c0, lp0 = common.sample_with_noise(
+                    logits, noise_at(tl), temperature, top_p)
+                # draft proposes c1..c_{K-1}; it also consumes c_{K-1}
+                # so its cache covers every position a full acceptance
+                # could commit
+                toks, lps = [c0], [lp0]
+                d_logits, dc, cur = logits, draft_cache, c0
+                for jj in range(K):
+                    adv_j = write & (jj < ek)
+                    dl_new, dc = draft_step(cur, dc, adv_j)
+                    d_logits = jnp.where(adv_j[:, None], dl_new, d_logits)
+                    if jj < K - 1:
+                        cur, _ = common.sample_with_noise(
+                            d_logits, noise_at(tl + jj + 1), temperature,
+                            top_p)
+                        toks.append(cur)
+                chunk = jnp.stack(toks, axis=1)          # (B,K)
+                # ONE batched verify pass: vlogits[:, j] is the full
+                # model's distribution after consuming chunk[:, :j+1]
+                vlogits, cache = dense_tf.spec_verify_step(
+                    model_cfg, params, chunk, cache, attn_impl=attn_impl,
+                    advance=write, eff_k=ek, **cow_kw)
+                # acceptance: chunk[:, j] commits iff it IS the token the
+                # non-speculative engine would sample from vlogits[:,j-1]
+                # with that step's noise row (greedy: exact argmax match)
+                match = write
+                commits = write.astype(jnp.int32)        # c0 always
+                for jj in range(1, K):
+                    e_j, lp_j = common.sample_with_noise(
+                        vlogits[:, jj - 1], noise_at(tl + jj),
+                        temperature, top_p)
+                    lps.append(lp_j)
+                    match = match & (chunk[:, jj] == e_j) & (jj < ek)
+                    commits = commits + match.astype(jnp.int32)
+                # an action token ends the turn: never commit past the
+                # first one (the scan engine stops writing after it)
+                is_act = common.action_mask(chunk, n_actions)
+                first_act = jnp.where(jnp.any(is_act, axis=1),
+                                      jnp.argmax(is_act, axis=1), K)
+                commits = jnp.minimum(commits, first_act + 1)
+                commits = jnp.where(write, commits, 0)
+                # buffer writes for all committed positions in one 2D
+                # scatter (OOB column T drops the rest of the chunk)
+                jarr = jnp.arange(K)[None, :]
+                cmask = write[:, None] & (jarr < commits[:, None])
+                cidx = jnp.where(cmask, pos[:, None] + jarr, T)
+                lp_all = jnp.stack(lps, axis=1)          # (B,K)
+                r2 = rows[:, None]
+                tokens = tokens.at[r2, cidx].set(chunk, mode="drop")
+                gen_mask = gen_mask.at[r2, cidx].set(True, mode="drop")
+                logprobs = logprobs.at[r2, cidx].set(lp_all, mode="drop")
+                # carried logits: the full model's distribution after the
+                # last committed token — bitwise what sequential decode
+                # would carry (non-writing rows keep theirs)
+                lastj = jnp.clip(commits - 1, 0, K - 1)
+                logits = jnp.where(write[:, None], vlogits[rows, lastj],
+                                   logits)
+                cache = dense_tf.spec_commit(cache, commits)
+                # draft rollback: its fill line := the committed position
+                # (ring validity is derived from pos, so entries above it
+                # — rejected proposals — become invisible and are
+                # overwritten by the next round's writes)
+                dc = dc._replace(pos=pos + commits)
+                last_commit = chunk[rows, lastj]
+                last_tok = jnp.where(write, last_commit, last_tok)
+                newly = write & (first_act < commits)
+                act_tok = chunk[rows, jnp.clip(first_act, 0, K - 1)]
+                actions = jnp.where(newly, act_tok - ACTION_BASE, actions)
+                acted = acted | newly
+                pos = pos + commits
+                tl = tl + commits
+                sp = sp + jnp.sum(jnp.maximum(ek - 1, 0))
+                sa = sa + jnp.sum(jnp.where(write, commits - 1, 0))
+                sr = sr + jnp.sum(write.astype(jnp.int32))
+                return (logits, cache, dc, tokens, gen_mask, logprobs,
+                        pos, acted, actions, last_tok, tl, sp, sa, sr)
+
+            zeros = jnp.zeros((B,), jnp.int32)
+            z0 = jnp.asarray(0, jnp.int32)
+            init = (logits, cache, draft_cache, tokens, gen_mask,
+                    logprobs, pos, ~active, zeros, zeros, zeros, z0, z0,
+                    z0)
+            return lax.while_loop(cond, body, init)
+
         def write_prefix_tokens(tokens, obs, rows_mask):
             """Bulk-write the (skipped) shared-prefix observation tokens
             into ``rows_mask`` rows' context buffers: the harvested
@@ -416,24 +634,38 @@ class CompiledRolloutEngine:
             m = rows_mask[:, None] & (jnp.arange(T)[None, :] < shared_len)
             return jnp.where(m, pad, tokens)
 
-        def init_feed(params, ref_params, carry: slots.SlotCarry):
+        def make_draft(params, draft_params):
+            """(draft params pytree, scan body) for the active speculation
+            mode; ``"self"`` slices the policy's own layer stack in-graph
+            (a view — XLA aliases it, no copy)."""
+            if not spec_on:
+                return None, None
+            d_params = (dense_tf.draft_params_view(params, draft_layers)
+                        if speculation == "self" else draft_params)
+            return d_params, dense_tf.decode_scan_body(draft_cfg, d_params)
+
+        def init_feed(params, ref_params, draft_params,
+                      carry: slots.SlotCarry):
             """Feed the initial observation of every live slot (the
             engine's "prefill", run once before the macro-step loop)."""
             decode = model.decode_scan_body(params, attn_impl=attn_impl,
                                             **cow_kw)
             ref_decode = (model.decode_scan_body(ref_params)
                           if with_ref else None)
+            _, draft_decode = make_draft(params, draft_params)
             obs = env.encode_obs(carry.env_state)
             if shared_pages == 0:
                 (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
-                 pos) = feed_obs(
-                    decode, ref_decode, carry.logits, carry.cache,
-                    carry.ref_logits, carry.ref_cache, carry.tokens,
-                    carry.ref_logprobs, carry.pos, obs, carry.live)
+                 pos, draft_cache) = feed_obs(
+                    decode, ref_decode, draft_decode, carry.logits,
+                    carry.cache, carry.ref_logits, carry.ref_cache,
+                    carry.tokens, carry.ref_logprobs, carry.pos, obs,
+                    carry.live, draft_cache=carry.draft_cache)
                 return carry._replace(logits=logits, cache=cache,
                                       ref_logits=ref_logits,
                                       ref_cache=ref_cache, tokens=tokens,
-                                      ref_logprobs=ref_lp_buf, pos=pos)
+                                      ref_logprobs=ref_lp_buf, pos=pos,
+                                      draft_cache=draft_cache)
             # shared-prefix init: decode the common prefix through slot 0
             # ONLY (per-row math is row-independent, so the pages slot 0
             # fills hold bitwise the K/V any slot would have computed),
@@ -441,11 +673,12 @@ class CompiledRolloutEngine:
             # then feed just the per-slot suffix columns.
             row0 = rows == 0                    # slot 0 is live (N >= 1)
             (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
-             pos) = feed_obs(
-                decode, ref_decode, carry.logits, carry.cache,
-                carry.ref_logits, carry.ref_cache, carry.tokens,
-                carry.ref_logprobs, carry.pos, obs[:, :shared_len],
-                row0 & carry.live)
+             pos, draft_cache) = feed_obs(
+                decode, ref_decode, draft_decode, carry.logits,
+                carry.cache, carry.ref_logits, carry.ref_cache,
+                carry.tokens, carry.ref_logprobs, carry.pos,
+                obs[:, :shared_len], row0 & carry.live,
+                draft_cache=carry.draft_cache)
             prefix_pages = cache.block_table[0, :shared_pages]
             # engine-held pin; guard unmapped entries (pool exhausted
             # during the slot-0 feed): -1 would WRAP, not drop
@@ -456,19 +689,30 @@ class CompiledRolloutEngine:
             cache = paging.fork_prefix(cache, prefix_pages,
                                        carry.live & ~row0, shared_len)
             pos = jnp.where(carry.live, shared_len, pos)
+            if spec_on:
+                # the draft's dense cache cannot fork pool pages: rows
+                # other than slot 0 skip the prefix columns with ZERO
+                # draft K/V behind their fill line — draft predictions
+                # degrade (lower acceptance) but the verify pass gates
+                # every commit, so the committed stream is unaffected
+                draft_cache = draft_cache._replace(
+                    pos=jnp.where(carry.live, shared_len,
+                                  draft_cache.pos))
             tokens = write_prefix_tokens(tokens, obs, carry.live)
             (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
-             pos) = feed_obs(
-                decode, ref_decode, logits, cache, ref_logits, ref_cache,
-                tokens, ref_lp_buf, pos, obs[:, shared_len:], carry.live)
+             pos, draft_cache) = feed_obs(
+                decode, ref_decode, draft_decode, logits, cache,
+                ref_logits, ref_cache, tokens, ref_lp_buf, pos,
+                obs[:, shared_len:], carry.live, draft_cache=draft_cache)
             return carry._replace(logits=logits, cache=cache,
                                   ref_logits=ref_logits,
                                   ref_cache=ref_cache, tokens=tokens,
                                   ref_logprobs=ref_lp_buf, pos=pos,
-                                  prefix_pages=prefix_pages)
+                                  prefix_pages=prefix_pages,
+                                  draft_cache=draft_cache)
 
-        def turn_step(params, ref_params, carry: slots.SlotCarry, trng,
-                      brng):
+        def turn_step(params, ref_params, draft_params,
+                      carry: slots.SlotCarry, trng, brng):
             # invariant: every live slot's observation is already fed (by
             # init_feed or the previous step's combined feed), so the turn
             # starts generating immediately
@@ -476,6 +720,7 @@ class CompiledRolloutEngine:
                                             **cow_kw)
             ref_decode = (model.decode_scan_body(ref_params)
                           if with_ref else None)
+            d_params, draft_decode = make_draft(params, draft_params)
             c = carry
 
             # 0. memory-pressure governor (preempt mode): BEFORE anything
@@ -521,17 +766,34 @@ class CompiledRolloutEngine:
             if preempt:
                 active = active & run_mask
 
-            # 2. generation scan over decode steps (per-token keys from the
-            #    shared derivation — the parity contract with the python
-            #    engine)
-            krngs = jax.vmap(lambda t: common.sample_rng(trng, t))(
-                jnp.arange(mtt))
-            (logits, cache, ref_logits, ref_cache, tokens, gen_mask,
-             logprobs, ref_lp_buf, pos, acted, actions, last_tok,
-             tl) = gen_turn(
-                decode, ref_decode, c.logits, c.cache, c.ref_logits,
-                c.ref_cache, c.tokens, c.gen_mask, c.logprobs,
-                c.ref_logprobs, c.pos, active, krngs)
+            # 2. generation: a scan over single decode steps, or — with
+            #    speculation on — a while_loop over draft-propose /
+            #    batch-verify rounds committing the same token stream
+            #    (per-token keys from the shared derivation in both — the
+            #    parity contract with the python engine)
+            if spec_on:
+                (logits, cache, draft_cache, tokens, gen_mask, logprobs,
+                 pos, acted, actions, last_tok, tl, d_sp, d_sa,
+                 d_sr) = spec_gen_turn(
+                    params, d_params, c.logits, c.cache, c.draft_cache,
+                    c.tokens, c.gen_mask, c.logprobs, c.pos, active, trng)
+                ref_logits, ref_cache = c.ref_logits, c.ref_cache
+                ref_lp_buf = c.ref_logprobs
+                spec_proposed = c.spec_proposed + d_sp
+                spec_accepted = c.spec_accepted + d_sa
+                spec_rounds = c.spec_rounds + d_sr
+            else:
+                krngs = jax.vmap(lambda t: common.sample_rng(trng, t))(
+                    jnp.arange(mtt))
+                (logits, cache, ref_logits, ref_cache, tokens, gen_mask,
+                 logprobs, ref_lp_buf, pos, acted, actions, last_tok,
+                 tl) = gen_turn(
+                    decode, ref_decode, c.logits, c.cache, c.ref_logits,
+                    c.ref_cache, c.tokens, c.gen_mask, c.logprobs,
+                    c.ref_logprobs, c.pos, active, krngs)
+                draft_cache = c.draft_cache
+                spec_proposed, spec_accepted, spec_rounds = (
+                    c.spec_proposed, c.spec_accepted, c.spec_rounds)
 
             # 2b. paged-pool telemetry, measured post-generation (peak
             #     occupancy: finished slots have not released yet). The
@@ -631,9 +893,18 @@ class CompiledRolloutEngine:
             r1 = refill[:, None]
 
             def do_reset(args):
-                cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf, \
-                    pos, n_turns, tls, shortfall, state = args
+                (cache, ref_cache, draft_cache, tokens, gen_mask, logprobs,
+                 ref_lp_buf, pos, n_turns, tls, shortfall, state) = args
                 cache = _reset_cache_rows(cache, refill)
+                if spec_on:
+                    # fresh episode: zero the draft rows; with prefix
+                    # sharing its fill line starts at shared_len with
+                    # zero K/V behind it (acceptance-only degradation —
+                    # see init_feed)
+                    draft_cache = _reset_cache_rows(draft_cache, refill)
+                    draft_cache = draft_cache._replace(
+                        pos=jnp.where(refill, shared_len,
+                                      draft_cache.pos))
                 if shared_pages > 0:
                     # fresh episode inherits the pinned shared-prefix run:
                     # fork its pages into the freed slot's block table and
@@ -657,6 +928,7 @@ class CompiledRolloutEngine:
                 return (cache,
                         (_reset_cache_rows(ref_cache, refill)
                          if with_ref else ref_cache),
+                        draft_cache,
                         jnp.where(r1, TOK_PAD, tokens),
                         jnp.where(r1, False, gen_mask),
                         jnp.where(r1, 0.0, logprobs),
@@ -668,11 +940,13 @@ class CompiledRolloutEngine:
                         jnp.where(refill, 0, shortfall),
                         state_reset)
 
-            (cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf,
-             pos, n_turns, turn_lengths, kv_shortfall, state3) = lax.cond(
+            (cache, ref_cache, draft_cache, tokens, gen_mask, logprobs,
+             ref_lp_buf, pos, n_turns, turn_lengths, kv_shortfall,
+             state3) = lax.cond(
                 jnp.any(refill), do_reset, lambda args: args,
-                (cache, ref_cache, tokens, gen_mask, logprobs, ref_lp_buf,
-                 pos, n_turns, turn_lengths, kv_shortfall, state2))
+                (cache, ref_cache, draft_cache, tokens, gen_mask,
+                 logprobs, ref_lp_buf, pos, n_turns, turn_lengths,
+                 kv_shortfall, state2))
 
             # 7. ONE combined obs feed: continuing rows teacher-force the
             #    env observation, refilled rows their reset observation —
@@ -688,40 +962,43 @@ class CompiledRolloutEngine:
 
             def do_feed(args):
                 (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
-                 pos) = args
+                 pos, draft_cache) = args
                 obs = jnp.where(r1, env.encode_obs(state3),
                                 jnp.asarray(res.obs_tokens))
                 if shared_pages == 0:
-                    return feed_obs(decode, ref_decode, logits, cache,
-                                    ref_logits, ref_cache, tokens,
-                                    ref_lp_buf, pos, obs, feed_mask)
+                    return feed_obs(decode, ref_decode, draft_decode,
+                                    logits, cache, ref_logits, ref_cache,
+                                    tokens, ref_lp_buf, pos, obs,
+                                    feed_mask, draft_cache=draft_cache)
                 tokens = write_prefix_tokens(tokens, obs, refill)
 
                 def full(a):
                     (logits, cache, ref_logits, ref_cache, tokens,
-                     ref_lp_buf, pos) = a
-                    return feed_obs(decode, ref_decode, logits, cache,
-                                    ref_logits, ref_cache, tokens,
-                                    ref_lp_buf, pos, obs, feed_mask,
+                     ref_lp_buf, pos, draft_cache) = a
+                    return feed_obs(decode, ref_decode, draft_decode,
+                                    logits, cache, ref_logits, ref_cache,
+                                    tokens, ref_lp_buf, pos, obs,
+                                    feed_mask, draft_cache=draft_cache,
                                     skip=refill, n_skip=shared_len)
 
                 def suffix_only(a):
                     (logits, cache, ref_logits, ref_cache, tokens,
-                     ref_lp_buf, pos) = a
-                    return feed_obs(decode, ref_decode, logits, cache,
-                                    ref_logits, ref_cache, tokens,
-                                    ref_lp_buf, pos, obs[:, shared_len:],
-                                    refill)
+                     ref_lp_buf, pos, draft_cache) = a
+                    return feed_obs(decode, ref_decode, draft_decode,
+                                    logits, cache, ref_logits, ref_cache,
+                                    tokens, ref_lp_buf, pos,
+                                    obs[:, shared_len:], refill,
+                                    draft_cache=draft_cache)
 
                 return lax.cond(jnp.any(cont), full, suffix_only,
                                 (logits, cache, ref_logits, ref_cache,
-                                 tokens, ref_lp_buf, pos))
+                                 tokens, ref_lp_buf, pos, draft_cache))
 
             (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
-             pos) = lax.cond(
+             pos, draft_cache) = lax.cond(
                 jnp.any(feed_mask), do_feed, lambda args: args,
                 (logits, cache, ref_logits, ref_cache, tokens, ref_lp_buf,
-                 pos))
+                 pos, draft_cache))
 
             return slots.SlotCarry(
                 cache=cache,
@@ -750,6 +1027,10 @@ class CompiledRolloutEngine:
                 preempted=c.preempted,
                 requeue=requeue,
                 requeue_peak=c.requeue_peak,
+                draft_cache=draft_cache,
+                spec_proposed=spec_proposed,
+                spec_accepted=spec_accepted,
+                spec_rounds=spec_rounds,
             )
 
         return init_feed, turn_step
@@ -789,24 +1070,28 @@ class CompiledRolloutEngine:
     def _compile(self, B: int, N: int, with_ref: bool):
         init_feed, turn_step = self._build_turn_step(B, N, with_ref)
         if self._mesh_config is None:
-            return (jax.jit(init_feed, donate_argnums=(2,)),
-                    jax.jit(turn_step, donate_argnums=(2,)))
+            return (jax.jit(init_feed, donate_argnums=(3,)),
+                    jax.jit(turn_step, donate_argnums=(3,)))
 
         mesh = self._mesh_config.make_mesh()
         carry_sh = self._carry_shardings(mesh, B, N, with_ref)
-        jf_init = jax.jit(init_feed, in_shardings=(None, None, carry_sh),
-                          out_shardings=carry_sh, donate_argnums=(2,))
+        jf_init = jax.jit(init_feed,
+                          in_shardings=(None, None, None, carry_sh),
+                          out_shardings=carry_sh, donate_argnums=(3,))
         jf_turn = jax.jit(turn_step,
-                          in_shardings=(None, None, carry_sh, None, None),
-                          out_shardings=carry_sh, donate_argnums=(2,))
+                          in_shardings=(None, None, None, carry_sh, None,
+                                        None),
+                          out_shardings=carry_sh, donate_argnums=(3,))
 
-        def call_init(params, ref_params, carry):
+        def call_init(params, ref_params, draft_params, carry):
             with mesh:                       # anchor layers.constrain
-                return jf_init(params, ref_params, carry)
+                return jf_init(params, ref_params, draft_params, carry)
 
-        def call_turn(params, ref_params, carry, trng, brng):
+        def call_turn(params, ref_params, draft_params, carry, trng,
+                      brng):
             with mesh:
-                return jf_turn(params, ref_params, carry, trng, brng)
+                return jf_turn(params, ref_params, draft_params, carry,
+                               trng, brng)
 
         return call_init, call_turn
 
@@ -853,6 +1138,14 @@ class CompiledRolloutEngine:
                      if carry_abs.requeue is not None else None),
             requeue_peak=(rep if carry_abs.requeue_peak is not None
                           else None),
+            draft_cache=(csh(carry_abs.draft_cache)
+                         if carry_abs.draft_cache is not None else None),
+            spec_proposed=(rep if carry_abs.spec_proposed is not None
+                           else None),
+            spec_accepted=(rep if carry_abs.spec_accepted is not None
+                           else None),
+            spec_rounds=(rep if carry_abs.spec_rounds is not None
+                         else None),
         )
 
     # -- carry init ---------------------------------------------------------
@@ -926,17 +1219,32 @@ class CompiledRolloutEngine:
             preempted=(jnp.asarray(0, jnp.int32) if preempt else None),
             requeue=(jnp.zeros((N,), bool) if preempt else None),
             requeue_peak=(jnp.asarray(0, jnp.int32) if preempt else None),
+            # the draft's cache is always dense (its footprint is small —
+            # a truncated stack or a small model — so pool sizing stays a
+            # policy-cache-only concern, like the ref cache)
+            draft_cache=(dense_tf.init_cache(self._draft_cfg, B, T)
+                         if self.speculation != "off" else None),
+            spec_proposed=(jnp.asarray(0, jnp.int32)
+                           if self.speculation != "off" else None),
+            spec_accepted=(jnp.asarray(0, jnp.int32)
+                           if self.speculation != "off" else None),
+            spec_rounds=(jnp.asarray(0, jnp.int32)
+                         if self.speculation != "off" else None),
         )
 
     # ------------------------------------------------------------------
     def run(self, params, rng, batch: int, *, n_episodes: Optional[int] =
-            None, extra=None, ref_params=None, params_version: int = -1):
+            None, extra=None, ref_params=None, draft_params=None,
+            params_version: int = -1):
         """Roll out ``n_episodes`` (default: ``batch``) episodes over
         ``batch`` device slots. Returns (ExperienceBatch, RolloutStats).
 
         ``ref_params`` folds the reference-model log-prob pass into the
-        macro-step (in-graph ExpPrep); ``params_version`` tags the stats
-        with the update counter of ``params`` for policy-lag accounting.
+        macro-step (in-graph ExpPrep); ``draft_params`` are the
+        registered small model's params for ``speculation="draft"``
+        (``"self"`` slices the policy's own stack in-graph and needs
+        none); ``params_version`` tags the stats with the update counter
+        of ``params`` for policy-lag accounting.
         """
         del extra
         B = int(batch)
@@ -951,6 +1259,17 @@ class CompiledRolloutEngine:
                 "the ref pass needs. Run the reference log-prob pass "
                 "separately (make_ref_logprob_step) or disable "
                 "share_prefix.")
+        if with_ref and self.speculation != "off":
+            raise ValueError(
+                "speculation with in-graph ExpPrep (ref_params) is not "
+                "supported: the folded reference pass consumes tokens "
+                "one scan step at a time and cannot consume drafted "
+                "chunks. Run the reference log-prob pass separately "
+                "(make_ref_logprob_step) or turn speculation off.")
+        if self.speculation == "draft" and draft_params is None:
+            raise ValueError(
+                "speculation='draft' requires draft_params (the "
+                "registered draft_model's weights)")
 
         preempt = self.on_exhaust == "preempt"
         if preempt and self.cache_pages is not None \
@@ -964,7 +1283,7 @@ class CompiledRolloutEngine:
                 f"zero-drop guarantee cannot hold.")
 
         init_fn, turn_fn = self._get_compiled(B, N, with_ref)
-        carry = init_fn(params, ref_params,
+        carry = init_fn(params, ref_params, draft_params,
                         self._init_carry(rng, B, N, with_ref))
         base = jax.random.fold_in(rng, 1)
         brng = jax.random.fold_in(rng, 2)
@@ -991,7 +1310,7 @@ class CompiledRolloutEngine:
                                                self.page_size))
             last_dropped = last_preempted = 0
         for m in range(max_macro):
-            carry = turn_fn(params, ref_params, carry,
+            carry = turn_fn(params, ref_params, draft_params, carry,
                             common.turn_rng(base, m), brng)
             # ONE host sync per turn (the returned-counter read); the
             # on_exhaust="raise" drop check and the pool-growth trigger
@@ -1083,5 +1402,11 @@ class CompiledRolloutEngine:
                          if carry.preempted is not None else 0),
             requeue_depth=(int(carry.requeue_peak)
                            if carry.requeue_peak is not None else 0),
-            pool_grows=int(pool_grows))
+            pool_grows=int(pool_grows),
+            spec_proposed=(int(carry.spec_proposed)
+                           if carry.spec_proposed is not None else 0),
+            spec_accepted=(int(carry.spec_accepted)
+                           if carry.spec_accepted is not None else 0),
+            spec_rounds=(int(carry.spec_rounds)
+                         if carry.spec_rounds is not None else 0))
         return exp, stats

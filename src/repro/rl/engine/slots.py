@@ -91,6 +91,15 @@ class SlotCarry(NamedTuple):
     preempted: Any = None      # () int32 cumulative slot preemptions
     requeue: Any = None        # (N,) bool — episodes awaiting re-admission
     requeue_peak: Any = None   # () int32 peak requeue depth
+    # in-graph speculative decoding (None unless speculation is on): the
+    # draft model's dense decode cache rides the carry next to the
+    # policy's paged cache — its fill line is rolled back to the
+    # committed position after every verify round, so it only ever holds
+    # committed-token K/V (plus invisible entries above the fill line)
+    draft_cache: Any = None    # draft-model decode cache (dense)
+    spec_proposed: Any = None  # () int32 draft tokens proposed
+    spec_accepted: Any = None  # () int32 draft tokens accepted
+    spec_rounds: Any = None    # () int32 verify rounds (row-iterations)
 
 
 def init_store(n_episodes: int, max_context: int,

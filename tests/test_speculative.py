@@ -1,0 +1,385 @@
+"""In-graph self-speculative decoding (PR 9): the batched verify kernel
+vs its oracle, the verify-step / sequential-decode bitwise-logits
+contract, greedy AND sampled bit-identity of speculative vs plain
+rollouts (composed with prefix sharing, preemption and int8 pages), and
+the acceptance telemetry plumbing through RolloutStats / StepRecord.
+
+The acceptance bar under test: ``speculation="self"`` commits EXACTLY
+the token stream ``speculation="off"`` commits at equal rng — the draft
+only ever changes how many full-model evaluations that stream costs.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.spec_verify import (spec_verify_attention,
+                                       spec_verify_attention_ref)
+from repro.models import paging as mpaging
+from repro.rl.engine import CompiledRolloutEngine, common
+from repro.rl.envs import make_env
+
+TOLS = dict(atol=2e-5, rtol=1e-4)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    from repro.configs.base import get_smoke_config
+    from repro.models.registry import build_model
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _spec_case(rng, B, K, NP, P, ps, H, KV, hd, *, pos=None):
+    """Random verify-attention inputs: a non-contiguous block table whose
+    mapped pages cover ``[0, pos+K)`` per row — the chunk K/V is already
+    IN the pool (scatter-first), so the case is fully described by
+    (pool, block table, pos)."""
+    q = _rand(rng, (B, K, H, hd))
+    kp = _rand(jax.random.fold_in(rng, 1), (P, ps, KV, hd))
+    vp = _rand(jax.random.fold_in(rng, 2), (P, ps, KV, hd))
+    perm = jax.random.permutation(jax.random.fold_in(rng, 3),
+                                  P)[:B * NP].reshape(B, NP)
+    if pos is None:
+        pos = jax.random.randint(jax.random.fold_in(rng, 4), (B,), 0,
+                                 NP * ps - K + 1)
+    pos = jnp.asarray(pos, jnp.int32)
+    npages = -(-(pos + K) // ps)
+    bt = jnp.where(jnp.arange(NP)[None, :] < npages[:, None], perm, -1)
+    return q, kp, vp, bt, pos
+
+
+# ---------------------------------------------------------------------------
+# Verify kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,K,NP,P,ps,H,KV,hd", [
+    (2, 4, 4, 16, 8, 4, 2, 64),
+    (3, 6, 8, 32, 16, 8, 8, 32),
+    (2, 4, 4, 16, 8, 14, 2, 64),   # qwen2's non-pow2 head count
+    (1, 8, 2, 8, 128, 2, 1, 64),   # MQA, chunk inside one big page
+])
+def test_spec_verify_matches_ref(B, K, NP, P, ps, H, KV, hd, rng):
+    q, kp, vp, bt, pos = _spec_case(rng, B, K, NP, P, ps, H, KV, hd)
+    out = spec_verify_attention(q, kp, vp, bt, pos, interpret=True)
+    expect = spec_verify_attention_ref(q, kp, vp, bt, pos)
+    assert out.shape == (B, K, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               **TOLS)
+
+
+def test_spec_verify_ragged_positions_partial_last_page(rng):
+    """Pin the ragged boundary: one row's chunk starts a fresh page, one
+    straddles a page boundary mid-chunk, one ends one token short of a
+    page — each query j within a row sees a different length pos+j+1."""
+    B, K, NP, P, ps, H, KV, hd = 3, 4, 4, 16, 8, 4, 2, 32
+    pos = [ps * 2, ps - 2, ps * 2 - K - 1]
+    q, kp, vp, bt, pos = _spec_case(rng, B, K, NP, P, ps, H, KV, hd,
+                                    pos=pos)
+    out = spec_verify_attention(q, kp, vp, bt, pos, interpret=True)
+    expect = spec_verify_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               **TOLS)
+
+
+def test_spec_verify_k1_degenerates_to_paged_decode(rng):
+    """At K == 1 the verify kernel IS single-token paged attention with
+    lens = pos + 1 (the degeneracy that anchors its semantics)."""
+    from repro.kernels.paged_attention import paged_decode_attention
+    B, K, NP, P, ps, H, KV, hd = 2, 1, 4, 16, 8, 4, 2, 64
+    q, kp, vp, bt, pos = _spec_case(rng, B, K, NP, P, ps, H, KV, hd)
+    out = spec_verify_attention(q, kp, vp, bt, pos, interpret=True)
+    single = paged_decode_attention(q[:, 0], kp, vp, bt, pos + 1,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(single),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_spec_verify_int8_in_kernel_dequant_bitwise(rng):
+    """int8 pools: the kernel's in-register dequant must be BITWISE the
+    result of materializing the dequantized f32 pool first — dequant
+    location must not perturb a single ulp (the greedy bit-identity
+    contract rides on this)."""
+    B, K, NP, P, ps, H, KV, hd = 2, 4, 4, 16, 8, 4, 2, 32
+    q, kp, vp, bt, pos = _spec_case(rng, B, K, NP, P, ps, H, KV, hd)
+    kq, ks = mpaging.quantize_kv(kp)
+    vq, vs = mpaging.quantize_kv(vp)
+    lazy = spec_verify_attention(q, kq, vq, bt, pos, k_scales=ks,
+                                 v_scales=vs, interpret=True)
+    materialized = spec_verify_attention(
+        q, mpaging.dequantize_kv(kq, ks), mpaging.dequantize_kv(vq, vs),
+        bt, pos, interpret=True)
+    np.testing.assert_array_equal(np.asarray(lazy),
+                                  np.asarray(materialized))
+    # and both agree with the (materializing) oracle
+    expect = spec_verify_attention_ref(q, kq, vq, bt, pos, k_scales=ks,
+                                       v_scales=vs)
+    np.testing.assert_allclose(np.asarray(lazy), np.asarray(expect),
+                               **TOLS)
+
+
+def test_spec_verify_unmapped_chunk_page_is_masked_finite(rng):
+    """Pool exhaustion drops the chunk write: queries whose own position
+    page is unmapped return zeros (never NaN) in kernel and oracle."""
+    B, K, NP, P, ps, H, KV, hd = 2, 4, 4, 16, 8, 4, 2, 32
+    q, kp, vp, bt, pos = _spec_case(rng, B, K, NP, P, ps, H, KV, hd,
+                                    pos=[ps - 2, 0])
+    bt = bt.at[1].set(-1)                   # row 1: nothing mapped at all
+    out = spec_verify_attention(q, kp, vp, bt, pos, interpret=True)
+    assert bool(jnp.isfinite(out).all())
+    expect = spec_verify_attention_ref(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               **TOLS)
+
+
+# ---------------------------------------------------------------------------
+# Verify step vs sequential decode: the bitwise-logits contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["fp32", "bf16", "int8"])
+def test_spec_verify_step_logits_bitwise_vs_sequential(model_and_params,
+                                                       kv_dtype):
+    """THE property greedy bit-identity rests on: scoring a K-chunk with
+    one ``spec_verify_step`` yields, at every position j, logits BITWISE
+    EQUAL to feeding the same tokens through ``decode_step`` one at a
+    time — because the verify pass scatters the chunk into the pool
+    FIRST and then reads everything back at pool precision in page
+    order, exactly as the sequential steps would."""
+    from repro.models import transformer as tf
+    model, params = model_and_params
+    cfg = model.cfg
+    B, K, T, ps = 2, 4, 32, 4
+    rng = jax.random.PRNGKey(3)
+    chunk = jax.random.randint(rng, (B, K), 0, cfg.vocab_size)
+    prefix = jax.random.randint(jax.random.fold_in(rng, 1), (B, 5), 0,
+                                cfg.vocab_size)
+
+    def fresh_cache():
+        cache = model.init_cache(B, T, layout="paged", page_size=ps,
+                                 kv_dtype=kv_dtype)
+        for t in range(prefix.shape[1]):
+            _, cache = tf.decode_step(cfg, params, prefix[:, t], cache)
+        return cache
+
+    cache = fresh_cache()
+    vlogits, _ = tf.spec_verify_step(cfg, params, chunk, cache, cow=False)
+
+    cache = fresh_cache()
+    for j in range(K):
+        logits_j, cache = tf.decode_step(cfg, params, chunk[:, j], cache)
+        np.testing.assert_array_equal(np.asarray(vlogits[:, j]),
+                                      np.asarray(logits_j),
+                                      err_msg=f"position {j}")
+
+
+def test_sample_with_noise_matches_sample_tokens(rng):
+    """The precomputed-noise sampler is the exact sampling rule: for any
+    (temperature, top_p), ``sample_with_noise(lg, gumbel(key), t, p)``
+    returns bitwise the (token, logprob) of ``sample_tokens(key, lg, t,
+    p)`` — what lets K acceptance decisions replay K scan steps' rng."""
+    lg = jax.random.normal(rng, (4, 64)) * 3.0
+    for t, p in [(0.0, 1.0), (1.0, 1.0), (0.7, 0.9), (1.3, 0.5)]:
+        key = jax.random.fold_in(rng, int(t * 10 + p * 100))
+        tok_a, lp_a = common.sample_tokens(key, lg, t, p)
+        noise = common.sample_noise(key, lg.shape)
+        tok_b, lp_b = common.sample_with_noise(lg, noise, t, p)
+        np.testing.assert_array_equal(np.asarray(tok_a),
+                                      np.asarray(tok_b))
+        np.testing.assert_array_equal(np.asarray(lp_a), np.asarray(lp_b))
+
+
+# ---------------------------------------------------------------------------
+# Engine: speculative rollouts are bit-identical to plain rollouts
+# ---------------------------------------------------------------------------
+
+ENGINE_KW = dict(max_turns=2, max_turn_tokens=6, max_context=96,
+                 cache_layout="paged", page_size=8)
+
+
+def _run_pair(model, params, env, *, spec_kw=None, run_kw=None, **kw):
+    base = dict(ENGINE_KW)
+    base.update(kw)
+    off = CompiledRolloutEngine(model, env, **base)
+    on = CompiledRolloutEngine(model, env, speculation="self", spec_k=4,
+                               draft_layers=1, **dict(base,
+                                                      **(spec_kw or {})))
+    rng = jax.random.PRNGKey(11)
+    run_kw = run_kw or {}
+    e0, s0 = off.run(params, rng, 4, **run_kw)
+    e1, s1 = on.run(params, rng, 4, **run_kw)
+    return e0, s0, e1, s1
+
+
+def _assert_identical(e0, e1):
+    np.testing.assert_array_equal(np.asarray(e0.tokens),
+                                  np.asarray(e1.tokens))
+    np.testing.assert_array_equal(np.asarray(e0.gen_mask),
+                                  np.asarray(e1.gen_mask))
+    np.testing.assert_array_equal(np.asarray(e0.logprobs),
+                                  np.asarray(e1.logprobs))
+    np.testing.assert_array_equal(np.asarray(e0.rewards),
+                                  np.asarray(e1.rewards))
+    np.testing.assert_array_equal(np.asarray(e0.context_len),
+                                  np.asarray(e1.context_len))
+
+
+@pytest.mark.parametrize("env_name", ["tictactoe", "bandit"])
+def test_greedy_bit_identity(model_and_params, env_name):
+    model, params = model_and_params
+    e0, _, e1, s1 = _run_pair(model, params, make_env(env_name),
+                              temperature=0.0)
+    _assert_identical(e0, e1)
+    assert s1.spec_rounds > 0
+
+
+def test_sampled_bit_identity_with_top_p(model_and_params):
+    """temperature > 0: acceptance replays the per-step Gumbel rows, so
+    even REJECTED proposals leave the committed stream untouched."""
+    model, params = model_and_params
+    e0, _, e1, s1 = _run_pair(model, params, make_env("bandit"),
+                              temperature=0.8, top_p=0.9)
+    _assert_identical(e0, e1)
+    assert s1.spec_proposed >= s1.spec_accepted >= 0
+
+
+def test_greedy_bit_identity_int8_pages(model_and_params):
+    model, params = model_and_params
+    e0, _, e1, _ = _run_pair(model, params, make_env("bandit"),
+                             temperature=0.0, kv_dtype="int8")
+    _assert_identical(e0, e1)
+
+
+def test_greedy_bit_identity_share_prefix(model_and_params):
+    """Speculation composes with CoW prefix sharing: the draft's dense
+    cache skips the forked columns (acceptance-only degradation), the
+    verify pass privatizes shared first pages before scattering."""
+    model, params = model_and_params
+    env = make_env("bandit", prompt_len=16)
+    e0, _, e1, _ = _run_pair(model, params, env, temperature=0.0,
+                             page_size=4, share_prefix=True)
+    _assert_identical(e0, e1)
+
+
+def test_greedy_bit_identity_preempt_refill(model_and_params):
+    """Speculation composes with slot refill and the preemption
+    governor: n_episodes > batch churns slots through resets while the
+    pressure plan stalls/evicts rows mid-rollout."""
+    model, params = model_and_params
+    env = make_env("tictactoe")
+    e0, s0, e1, s1 = _run_pair(model, params, env, temperature=0.0,
+                               on_exhaust="preempt",
+                               run_kw=dict(n_episodes=6))
+    _assert_identical(e0, e1)
+    assert s0.episodes_returned == s1.episodes_returned == 6
+
+
+# ---------------------------------------------------------------------------
+# Telemetry + trainer integration
+# ---------------------------------------------------------------------------
+
+def test_acceptance_telemetry_consistency(model_and_params):
+    """Counter invariants: rounds >= 1 per committed turn token cluster,
+    accepted <= proposed, and mean accepted length = (accepted + rounds)
+    / rounds lands in [1, spec_k]."""
+    model, params = model_and_params
+    eng = CompiledRolloutEngine(model, make_env("bandit"),
+                                speculation="self", spec_k=4,
+                                draft_layers=1, temperature=1.0,
+                                **ENGINE_KW)
+    _, stats = eng.run(params, jax.random.PRNGKey(5), 4)
+    assert stats.spec_rounds > 0
+    assert 0 <= stats.spec_accepted <= stats.spec_proposed
+    mean_len = (stats.spec_accepted + stats.spec_rounds) / stats.spec_rounds
+    assert 1.0 <= mean_len <= 4.0
+
+
+def test_spec_counters_reach_step_record(model_and_params):
+    from repro.core.stages import EarlTrainer
+    model, _ = model_and_params
+    tr = EarlTrainer(model=model, env=make_env("bandit"), batch_size=3,
+                     max_turns=1, max_turn_tokens=4, max_context=48,
+                     rollout_backend="compiled", cache_layout="paged",
+                     page_size=8, speculation="self", spec_k=3,
+                     draft_layers=1, temperature=1.0, seed=0)
+    params, opt_state, _ = tr.init_state()
+    _, _, rec = tr.run_step(0, params, opt_state)
+    assert rec.spec_rounds > 0
+    assert rec.spec_accepted <= rec.spec_proposed
+
+
+def test_speculation_rejects_bad_config(model_and_params):
+    model, _ = model_and_params
+    env = make_env("bandit")
+    with pytest.raises(ValueError, match="cache_layout='paged'"):
+        CompiledRolloutEngine(model, env, speculation="self",
+                              cache_layout="dense")
+    with pytest.raises(ValueError, match="spec_k"):
+        CompiledRolloutEngine(model, env, speculation="self", spec_k=1,
+                              **ENGINE_KW)
+    with pytest.raises(ValueError, match="draft_layers"):
+        CompiledRolloutEngine(model, env, speculation="self",
+                              draft_layers=99, **ENGINE_KW)
+    with pytest.raises(ValueError, match="fused"):
+        CompiledRolloutEngine(model, env, speculation="self",
+                              sampling="fused", **ENGINE_KW)
+    with pytest.raises(ValueError, match="draft_model"):
+        CompiledRolloutEngine(model, env, speculation="draft",
+                              **ENGINE_KW)
+
+
+def test_ref_fallback_warns_once_for_speculation(model_and_params):
+    """Satellite fix: the one-time ref-fallback warning must also fire —
+    and name speculation as the reason — when speculation is on and
+    ref_params cannot fold into the macro-step."""
+    from repro.core.stages import EarlTrainer
+    model, _ = model_and_params
+    tr = EarlTrainer(model=model, env=make_env("bandit"), batch_size=2,
+                     max_turns=1, max_turn_tokens=3, max_context=48,
+                     rollout_backend="compiled", cache_layout="paged",
+                     page_size=8, speculation="self", draft_layers=1,
+                     kl_coef=0.1, seed=0)
+    assert tr.ref_folded is False
+    params, opt_state, ref_params = tr.init_state()
+    assert ref_params is not None
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        tr._maybe_warn_ref_fallback(ref_params)
+        tr._maybe_warn_ref_fallback(ref_params)      # once only
+    msgs = [w for w in caught if "STANDALONE" in str(w.message)]
+    assert len(msgs) == 1
+    assert "speculation" in str(msgs[0].message)
+
+
+def test_expprep_reuses_behavior_logprobs_when_ref_is_behavior(
+        model_and_params):
+    """Satellite: when the reference IS the params that generated the
+    rollout (lag-1 snapshot) and sampling is unbiased, the standalone
+    ref pass is skipped and ref log-probs equal behavior log-probs at
+    every generated position (and 0 elsewhere)."""
+    from repro.core.stages import ExpPrepStage
+    from repro.rl.experience import ExperienceBatch
+    model, params = model_and_params
+    eng = CompiledRolloutEngine(model, make_env("bandit"),
+                                temperature=1.0, **ENGINE_KW)
+    exp, _ = eng.run(params, jax.random.PRNGKey(2), 3)
+    stage = ExpPrepStage(model)
+    out = stage(exp, ref_params=params, ref_folded=False,
+                reuse_behavior_lp=True)
+    np.testing.assert_array_equal(
+        np.asarray(out.ref_logprobs),
+        np.asarray(jnp.where(exp.gen_mask, exp.logprobs, 0.0)))
+    # and the reused values match what the standalone pass computes at
+    # the loss positions (loss_mask == gen_mask)
+    full = stage(exp, ref_params=params, ref_folded=False)
+    mask = np.asarray(exp.gen_mask)
+    np.testing.assert_allclose(
+        np.asarray(out.ref_logprobs)[mask],
+        np.asarray(full.ref_logprobs)[mask], atol=2e-5, rtol=1e-4)
